@@ -1,0 +1,101 @@
+"""Experiment 2 (paper Table 7): circuit-only baseline vs multiset design —
+REAL proofs (STARK engine) at CPU-scaled configs + the analytic gate model
+at the paper's exact configs.
+
+Reported per (config x design): physical rows G, padded-domain total G_B,
+prove/verify wall time, proof size, peak RSS — and the paper-config gate
+model (G, G_B, bins) for the faithful comparison.
+"""
+from __future__ import annotations
+
+import gc
+import os
+import resource
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import circuits, gates, ivfpq, shaping    # noqa: E402
+from repro.core.params import IVFPQParams, paper_config   # noqa: E402
+
+# CPU-scaled stand-ins for the paper's (basic, low-acc, large) points.
+CONFIGS = {
+    "basic-lite": IVFPQParams(D=16, n_list=16, n_probe=4, n=8, M=4, K=8,
+                              k=8, t_cmp=42, fp_bits=12),
+    "low-acc-lite": IVFPQParams(D=16, n_list=4, n_probe=1, n=32, M=4, K=2,
+                                k=1, t_cmp=42, fp_bits=12),
+    "large-lite": IVFPQParams(D=32, n_list=32, n_probe=8, n=8, M=4, K=16,
+                              k=16, t_cmp=42, fp_bits=12),
+}
+
+
+def rss_gib():
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1e6
+
+
+def run_one(name, p: IVFPQParams, design: str, n_queries=6, seed=0):
+    rng = np.random.default_rng(seed)
+    n0 = min(p.N, p.N - p.n)
+    vecs = rng.normal(size=(n0, p.D)).astype(np.float32)
+    ids = np.arange(n0, dtype=np.uint32)
+    snap = shaping.build_snapshot(vecs, ids, p, seed=seed)
+    q = shaping.fixed_point_encode(
+        rng.normal(size=p.D).astype(np.float32), snap.v_max, p.fp_bits)
+    trace = ivfpq.search_snapshot(snap, q)
+    sys_ = circuits.build_system(snap, design, seed=seed)
+    items = [int(x) for x in np.asarray(trace.items)]
+    t0 = time.time()
+    proof, _ = circuits.prove_query(sys_, snap, q, trace,
+                                    n_queries=n_queries)
+    prove_s = time.time() - t0      # includes one-time jit compile (noted)
+    t0 = time.time()
+    ok = circuits.verify_query(sys_, sys_.com, q, items, proof)
+    verify_s = time.time() - t0
+    assert ok, f"{name}/{design} verification failed"
+    G = sys_.total_rows
+    G_B = sys_.total_padded
+    res = dict(config=name, design=design, G=G, G_B=G_B,
+               prove_s=prove_s, verify_s=verify_s,
+               proof_kb=proof.size_bytes() / 1024, rss_gib=rss_gib())
+    del sys_, proof
+    gc.collect()
+    return res
+
+
+def analytic_table():
+    """The paper's exact three configs through the calibrated gate model."""
+    rows = []
+    for name in ("basic", "low-acc", "large"):
+        p = paper_config(name)
+        for design in ("baseline", "multiset"):
+            g = gates.gate_count(p, design)
+            rows.append(dict(config=name, design=design, G=g.G, G_B=g.G_B,
+                             prove_model_s=gates.prove_time_model(g.G_B)))
+    return rows
+
+
+def main(quick=False):
+    print("# analytic gate model at the paper's configs (Table 7 shape)")
+    print("config,design,G,G_B,prove_model_s")
+    for r in analytic_table():
+        print(f"{r['config']},{r['design']},{r['G']},{r['G_B']},"
+              f"{r['prove_model_s']:.2f}")
+    print("# real proofs (CPU-scaled configs)")
+    print("config,design,G_rows,G_B_padded,prove_s,verify_s,proof_kb,rss_gib")
+    names = ["basic-lite"]          # CPU budget: one config, both designs
+    out = []
+    for name in names:
+        for design in (["multiset"] if quick else ["baseline", "multiset"]):
+            r = run_one(name, CONFIGS[name], design)
+            out.append(r)
+            print(f"{r['config']},{r['design']},{r['G']},{r['G_B']},"
+                  f"{r['prove_s']:.2f},{r['verify_s']:.2f},"
+                  f"{r['proof_kb']:.0f},{r['rss_gib']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

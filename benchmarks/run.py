@@ -1,0 +1,55 @@
+"""Benchmark aggregator: one section per paper table + the roofline table.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark plus the
+detailed per-table sections. Heavy ZK benchmarks run with the native-u64
+field backend (JAX_ENABLE_X64 is set before jax import when possible).
+"""
+import os
+import sys
+
+if "jax" not in sys.modules:                      # enable fast field backend
+    os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time                                        # noqa: E402
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    t_all = time.time()
+    summary = []
+
+    def section(name, fn):
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            dt = time.time() - t0
+            summary.append((name, dt, "ok"))
+        except Exception as e:                     # noqa: BLE001
+            dt = time.time() - t0
+            summary.append((name, dt, f"FAILED: {e}"))
+            print(f"FAILED: {type(e).__name__}: {e}", flush=True)
+
+    from benchmarks import exp1_utility, exp2_provecost, exp3_sweeps, \
+        roofline
+
+    section("exp1_utility (paper Tables 5/6)",
+            lambda: exp1_utility.main(quick=quick))
+    section("exp2_provecost (paper Table 7)",
+            lambda: exp2_provecost.main(quick=quick))
+    section("exp3_sweeps (paper Tables 8/9)", exp3_sweeps.main)
+    section("roofline (EXPERIMENTS.md §Roofline)", roofline.main)
+
+    print("\n===== summary =====")
+    print("name,us_per_call,derived")
+    for name, dt, status in summary:
+        print(f"{name},{dt * 1e6:.0f},{status}")
+    print(f"total_s,{time.time() - t_all:.1f},")
+
+
+if __name__ == "__main__":
+    main()

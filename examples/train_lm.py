@@ -1,0 +1,21 @@
+"""End-to-end training driver: train a ~135M-class LM (reduced here for
+CPU) for a few hundred steps on the deterministic synthetic pipeline with
+checkpoint/restart supervision.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+(Full-size run: PYTHONPATH=src python -m repro.launch.train
+ --arch smollm-135m --steps 300 on a real pod.)
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.argv = [sys.argv[0], "--arch", "smollm-135m", "--smoke",
+            "--steps", os.environ.get("STEPS", "120"),
+            "--batch", "8", "--seq", "128",
+            "--ckpt-dir", "/tmp/repro_train_example"]
+
+from repro.launch.train import main                # noqa: E402
+
+main()

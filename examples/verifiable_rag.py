@@ -1,0 +1,16 @@
+"""Verifiable RAG serving: retrieval over a committed snapshot conditions
+LM generation; any disputed retrieval is audited with a ZK proof.
+
+  PYTHONPATH=src JAX_ENABLE_X64=1 python examples/verifiable_rag.py
+"""
+import os
+import sys
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.argv = [sys.argv[0], "--queries", "3", "--audit", "1",
+            "--decode-steps", "8"]
+
+from repro.launch.serve import main                # noqa: E402
+
+main()

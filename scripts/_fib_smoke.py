@@ -1,0 +1,73 @@
+import numpy as np, jax, time, copy
+import jax.numpy as jnp
+from repro.core import field as F, stark, fri
+from repro.core.field import GF
+from repro.core.transcript import Transcript
+P = F.P_INT
+rng = np.random.default_rng(0)
+
+log_n = 6; n = 1 << log_n
+a = np.zeros(n, dtype=np.uint64); b = np.zeros(n, dtype=np.uint64)
+a[0], b[0] = 1, 1
+for i in range(1, n):
+    a[i] = b[i-1]; b[i] = (a[i-1] + b[i-1]) % P
+phase1 = F.from_u64(np.stack([a, b, rng.integers(0, P, n, dtype=np.uint64)]))
+s_trans = np.ones(n, dtype=np.uint64); s_trans[-1] = 0
+pre = F.from_u64(np.stack([s_trans]))
+
+def eval_cons(pre_c, pre_x, p1_c, p1_x, p2_c, p2_x, ch):
+    s = GF(pre_c.lo[0], pre_c.hi[0])
+    a_c, b_c = GF(p1_c.lo[0], p1_c.hi[0]), GF(p1_c.lo[1], p1_c.hi[1])
+    a_n, b_n = GF(p1_x.lo[0], p1_x.hi[0]), GF(p1_x.lo[1], p1_x.hi[1])
+    return [F.mul(s, F.sub(a_n, b_c)), F.mul(s, F.sub(b_n, F.add(a_c, b_c)))]
+
+def mktable():
+    return stark.AirTable(
+        name="fib", log_n=log_n, blowup=4, max_degree=3, pre=pre,
+        n_phase1=3, n_phase2=1, eval_constraints=eval_cons,
+        boundaries=[stark.Boundary("p1", 0, 0), stark.Boundary("p1", 1, 0),
+                    stark.Boundary("p1", 1, n-1)])
+table = mktable()
+wit = stark.TableWitness(
+    phase1=phase1,
+    phase2_fn=lambda ch: F.from_u64(rng.integers(0, P, (1, n), dtype=np.uint64)))
+
+t0 = time.time()
+tr = Transcript("test"); tr.absorb_u64([42])
+proof = stark.prove([table], [wit], tr, n_queries=12)
+print(f"prove: {time.time()-t0:.1f}s, size {proof.size_bytes()/1024:.0f} kB")
+
+t0 = time.time()
+tr2 = Transcript("test"); tr2.absorb_u64([42])
+ok, info = stark.verify([table], proof, tr2)
+print(f"verify: {time.time()-t0:.2f}s ->", ok)
+assert ok
+assert int(info["claimed"][0][0]) == 1 and int(info["claimed"][0][2]) == int(b[-1])
+
+bad = copy.deepcopy(proof)
+bad.tables[0].claimed = bad.tables[0].claimed.copy()
+bad.tables[0].claimed[2] = np.uint64((int(bad.tables[0].claimed[2]) + 1) % P)
+tr3 = Transcript("test"); tr3.absorb_u64([42])
+ok_bad, _ = stark.verify([table], bad, tr3)
+print("tampered claimed rejected:", not ok_bad); assert not ok_bad
+
+b2 = b.copy(); b2[5] = np.uint64((int(b2[5]) + 1) % P)
+wit_bad = stark.TableWitness(
+    phase1=F.from_u64(np.stack([a, b2, rng.integers(0, P, n, dtype=np.uint64)])),
+    phase2_fn=wit.phase2_fn)
+tr4 = Transcript("test"); tr4.absorb_u64([42])
+proof_bad = stark.prove([mktable()], [wit_bad], tr4, n_queries=12)
+tr5 = Transcript("test"); tr5.absorb_u64([42])
+ok_bad2, _ = stark.verify([mktable()], proof_bad, tr5)
+print("invalid trace rejected:", not ok_bad2); assert not ok_bad2
+
+# second prove on same table objects should be much faster (jit cache)
+t0 = time.time()
+tr6 = Transcript("test"); tr6.absorb_u64([43])
+proof2 = stark.prove([table], [wit], tr6, n_queries=12)
+print(f"prove cached: {time.time()-t0:.2f}s")
+t0 = time.time()
+tr7 = Transcript("test"); tr7.absorb_u64([43])
+ok2, _ = stark.verify([table], proof2, tr7)
+print(f"verify cached: {time.time()-t0:.2f}s ->", ok2); assert ok2
+print("STARK ENGINE SMOKE TEST PASSED")

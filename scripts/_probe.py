@@ -1,0 +1,27 @@
+import time, sys
+t00 = time.time()
+def log(msg):
+    print(f"[{time.time()-t00:7.2f}s] {msg}", flush=True)
+log("importing")
+import numpy as np, jax
+import jax.numpy as jnp
+from repro.core import field as F, stark, fri, ntt, poseidon, merkle
+from repro.core.field import GF
+from repro.core.transcript import Transcript
+P = F.P_INT
+rng = np.random.default_rng(0)
+log("imports done")
+n = 64
+cols = F.from_u64(rng.integers(0, P, (3, n), dtype=np.uint64))
+lde = stark._lde_jit(cols, 4)
+lde.lo.block_until_ready(); log("lde done")
+levels = stark.commit_columns(lde)
+levels[-1].lo.block_until_ready(); log("commit_columns done")
+tr = Transcript("x"); log("transcript ctor done")
+tr.absorb(stark._root(levels)); log("absorb done")
+c = tr.challenge(3); log("challenge done")
+q = F.from_u64(rng.integers(0, P, (256,), dtype=np.uint64))
+fp = fri.prove(q, 8, ntt.COSET_SHIFT, tr, 12)
+log("fri.prove done")
+ok = fri.verify(fp, 8, ntt.COSET_SHIFT, Transcript("y"), 12)
+log(f"fri.verify done (expected transcript mismatch -> {ok})")

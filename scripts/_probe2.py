@@ -1,0 +1,58 @@
+import time, numpy as np, jax
+t00 = time.time()
+def log(m): print(f"[{time.time()-t00:7.1f}s] {m}", flush=True)
+import jax.numpy as jnp
+from repro.core import field as F, stark, fri, ntt
+from repro.core.field import GF
+from repro.core.transcript import Transcript
+P = F.P_INT
+rng = np.random.default_rng(0)
+log_n = 6; n = 1 << log_n
+a = np.zeros(n, dtype=np.uint64); b = np.zeros(n, dtype=np.uint64)
+a[0], b[0] = 1, 1
+for i in range(1, n):
+    a[i] = b[i-1]; b[i] = (a[i-1] + b[i-1]) % P
+phase1 = F.from_u64(np.stack([a, b, rng.integers(0, P, n, dtype=np.uint64)]))
+s_trans = np.ones(n, dtype=np.uint64); s_trans[-1] = 0
+pre = F.from_u64(np.stack([s_trans]))
+def eval_cons(pre_c, pre_x, p1_c, p1_x, p2_c, p2_x, ch):
+    s = GF(pre_c.lo[0], pre_c.hi[0])
+    a_c, b_c = GF(p1_c.lo[0], p1_c.hi[0]), GF(p1_c.lo[1], p1_c.hi[1])
+    a_n, b_n = GF(p1_x.lo[0], p1_x.hi[0]), GF(p1_x.lo[1], p1_x.hi[1])
+    return [F.mul(s, F.sub(a_n, b_c)), F.mul(s, F.sub(b_n, F.add(a_c, b_c)))]
+table = stark.AirTable(name="fib", log_n=log_n, blowup=4, max_degree=3, pre=pre,
+    n_phase1=3, n_phase2=1, eval_constraints=eval_cons,
+    boundaries=[stark.Boundary("p1", 0, 0), stark.Boundary("p1", 1, 0),
+                stark.Boundary("p1", 1, n-1)])
+log("setup done")
+# manual staged prove
+w = stark.TableWitness(phase1=phase1, phase2_fn=lambda ch: F.from_u64(rng.integers(0, P, (1, n), dtype=np.uint64)))
+tr = Transcript("test"); tr.absorb_u64([42]); log("tr")
+lde_cols = stark._lde_jit(w.phase1, 4); lde_cols.lo.block_until_ready(); log("p1 lde")
+levels = stark.commit_columns(lde_cols); levels[-1].lo.block_until_ready(); log("p1 commit")
+tr.absorb(stark._root(levels)); log("absorb")
+chv = tr.challenge(3); ch = {"alpha": stark._gf_scalar(chv,0), "beta": stark._gf_scalar(chv,1), "gamma": stark._gf_scalar(chv,2)}; log("ch")
+cols2 = w.phase2_fn(ch)
+lde2 = stark._lde_jit(cols2, 4); log("p2 lde")
+lev2 = stark.commit_columns(lde2); lev2[-1].lo.block_until_ready(); log("p2 commit")
+tr.absorb(stark._root(lev2))
+claimed = np.array([1, 1, int(b[-1])], dtype=np.uint64)
+tr.absorb_u64(claimed); log("claimed")
+lam = int(F.to_u64(tr.challenge(1))[0])
+N = table.domain; log_domain = N.bit_length()-1
+pre_lde = table.pre_lde(); pre_lde.lo.block_until_ready(); log("pre lde")
+roll = lambda g: GF(jnp.roll(g.lo, -4, axis=-1), jnp.roll(g.hi, -4, axis=-1))
+xs = F.from_u64(stark._domain_np(log_domain))
+zh = F.from_u64(np.tile(stark._zh_inv_cycle(table.log_n, 4), N//4))
+n_cons = stark._count_constraints(table); log(f"count cons={n_cons}")
+lam_pows = stark._lam_pows(lam, n_cons + 3)
+compose = table.composer(); log("composer built")
+q_vals = compose(pre_lde, roll(pre_lde), lde_cols, roll(lde_cols), lde2, roll(lde2),
+                 ch["alpha"], ch["beta"], ch["gamma"], lam_pows, F.from_u64(claimed), xs, zh)
+q_vals.lo.block_until_ready(); log("compose done")
+fp = fri.prove(q_vals, log_domain, ntt.COSET_SHIFT, tr, 12); log("fri done")
+pos = stark._positions(np.asarray(fp._indices), N, 4)
+vals = F.to_u64(stark._gather_rows(lde_cols, jnp.asarray(pos))); log("gather done")
+from repro.core import merkle
+paths = F.to_u64(merkle.open_paths_batch(levels, jnp.asarray(pos))); log("open done")
+log("ALL OK")

@@ -1,0 +1,56 @@
+import time, numpy as np, jax
+import jax.numpy as jnp
+t0=time.time()
+def log(m): print(f"[{time.time()-t0:6.1f}s] {m}", flush=True)
+from repro.core.params import IVFPQParams
+from repro.core import shaping, ivfpq, circuits, field as F, stark
+from repro.core.field import GF
+P = F.P_INT
+
+p = IVFPQParams(D=8, n_list=8, n_probe=2, n=4, M=2, K=4, k=3, t_cmp=40, fp_bits=12)
+rng = np.random.default_rng(0)
+vecs = rng.normal(size=(24, p.D)).astype(np.float32)
+ids = (np.arange(24, dtype=np.uint32) + 100)
+snap = shaping.build_snapshot(vecs, ids, p, seed=0)
+q = shaping.fixed_point_encode(rng.normal(size=p.D).astype(np.float32), snap.v_max, p.fp_bits)
+trace = ivfpq.search_snapshot(snap, q)
+sys_m = circuits.build_system(snap, "multiset", seed=0)
+aux = circuits._aux_from_trace(snap, q, trace)
+rngw = np.random.default_rng(1)
+t_dist, t_s2, t_rs, t_lt, t_rc, t_cd, t_s5 = sys_m.tbls
+fills = [circuits.fill_t_dist(t_dist, p, aux, rngw),
+         circuits.fill_sort_table(t_s2, aux["s2_packed"], p.n_probe, rngw),
+         circuits.fill_t_resid(t_rs, p, aux, rngw),
+         circuits.fill_t_lut(t_lt, p, aux, rngw, "multiset"),
+         circuits.fill_t_rec(t_rc, p, aux, rngw),
+         circuits.fill_t_cand(t_cd, p, aux, rngw),
+         circuits.fill_sort_table(t_s5, aux["s5_packed_sorted"], p.k, rngw)]
+# fake challenges
+A, B, G = 12345, 6789, 424242
+total = circuits.public_q_sum(p, q, (A, B, G))
+sc = lambda v: GF(jnp.uint32(v & 0xFFFFFFFF), jnp.uint32(v >> 32))
+ch = {"alpha": sc(A), "beta": sc(B), "gamma": sc(G)}
+for tbl, p1_np, at, scc in zip(sys_m.tbls, fills, sys_m.tables, sys_m.snap_cols):
+    snap_np = F.to_u64(scc) if scc is not None else None
+    p2_np, run = tbl.phase2_np(p1_np, snap_np, (A, B, G), np.random.default_rng(7))
+    total = (total + run) % P
+    # evaluate constraints on raw trace (roll by 1 for offset)
+    mk = lambda arr: F.from_u64(arr)
+    roll = lambda arr: np.roll(arr, -1, axis=1)
+    pre = {0: mk(tbl.pre_np), 1: mk(roll(tbl.pre_np))}
+    sn = {0: mk(snap_np), 1: mk(roll(snap_np))} if snap_np is not None else \
+         {0: GF(jnp.zeros((0, tbl.n), jnp.uint32), jnp.zeros((0, tbl.n), jnp.uint32)),
+          1: GF(jnp.zeros((0, tbl.n), jnp.uint32), jnp.zeros((0, tbl.n), jnp.uint32))}
+    p1g = {0: mk(p1_np), 1: mk(roll(p1_np))}
+    p2g = {0: mk(p2_np), 1: mk(roll(p2_np))}
+    cons = at.eval_constraints(pre, sn, p1g, p2g, ch)
+    bad = []
+    for ci, c in enumerate(cons):
+        vals = F.to_u64(c)
+        nz = np.nonzero(vals[:tbl.n - 1])[0]  # exclude wraparound row
+        nz = [r for r in nz if r < tbl.n - 1]
+        if len(nz):
+            bad.append((ci, nz[:5]))
+    status = "OK" if not bad else f"BAD {bad[:6]}"
+    log(f"{tbl.name}: rows={tbl.n_active} cons={len(cons)} -> {status}")
+print("logup total (should be 0):", total)

@@ -1,0 +1,23 @@
+import time, numpy as np, pickle, os
+t0 = time.time()
+def log(m): print(f"[{time.time()-t0:6.1f}s] {m}", flush=True)
+from repro.core.params import IVFPQParams
+from repro.core import shaping, ivfpq, circuits
+p = IVFPQParams(D=8, n_list=8, n_probe=2, n=4, M=2, K=4, k=3, t_cmp=40, fp_bits=12)
+rng = np.random.default_rng(0)
+vecs = rng.normal(size=(24, p.D)).astype(np.float32)
+ids = (np.arange(24, dtype=np.uint32) + 100)
+snap = shaping.build_snapshot(vecs, ids, p, seed=0)
+q = shaping.fixed_point_encode(rng.normal(size=p.D).astype(np.float32), snap.v_max, p.fp_bits)
+trace = ivfpq.search_snapshot(snap, q)
+items = [int(x) for x in np.asarray(trace.items)]
+sys_m = circuits.build_system(snap, "multiset", seed=0)
+log("system built")
+cache = "/tmp/zk_proof.pkl"
+if os.path.exists(cache):
+    proof = pickle.load(open(cache, "rb")); log("proof loaded from cache")
+else:
+    proof, _ = circuits.prove_query(sys_m, snap, q, trace, n_queries=12)
+    pickle.dump(proof, open(cache, "wb")); log("proved + cached")
+ok = circuits.verify_query(sys_m, sys_m.com, q, items, proof, debug=True)
+log(f"verify -> {ok}")

@@ -1,0 +1,27 @@
+import time, numpy as np, pickle, os
+t0 = time.time()
+def log(m): print(f"[{time.time()-t0:6.1f}s] {m}", flush=True)
+from repro.core.params import IVFPQParams
+from repro.core import shaping, ivfpq, circuits
+p = IVFPQParams(D=8, n_list=8, n_probe=2, n=4, M=2, K=4, k=3, t_cmp=40, fp_bits=12)
+rng = np.random.default_rng(0)
+vecs = rng.normal(size=(24, p.D)).astype(np.float32)
+ids = (np.arange(24, dtype=np.uint32) + 100)
+snap = shaping.build_snapshot(vecs, ids, p, seed=0)
+q = shaping.fixed_point_encode(rng.normal(size=p.D).astype(np.float32), snap.v_max, p.fp_bits)
+trace = ivfpq.search_snapshot(snap, q)
+items = [int(x) for x in np.asarray(trace.items)]
+sys_m = circuits.build_system(snap, "multiset", seed=0)
+proof = pickle.load(open("/tmp/zk_proof.pkl", "rb")); log("loaded")
+ok = circuits.verify_query(sys_m, sys_m.com, q, items, proof)
+log(f"honest -> {ok}"); assert ok
+bad = list(items); bad[0] = (bad[0] + 1)
+ok1 = circuits.verify_query(sys_m, sys_m.com, q, bad, proof)
+log(f"tampered item -> {ok1}"); assert not ok1
+com2 = sys_m.com.copy(); com2[0, 0] ^= np.uint64(1)
+ok2 = circuits.verify_query(sys_m, com2, q, items, proof)
+log(f"stale com -> {ok2}"); assert not ok2
+q2 = q.copy(); q2[0] += 1
+ok3 = circuits.verify_query(sys_m, sys_m.com, q2, items, proof)
+log(f"wrong query -> {ok3}"); assert not ok3
+log("ALL TAMPER TESTS PASS")

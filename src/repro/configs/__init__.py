@@ -1,0 +1,38 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_arch(arch_id)`` returns the ArchSpec; ``list_archs()`` enumerates.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "llava-next-34b",
+    "smollm-135m",
+    "mistral-nemo-12b",
+    "qwen1.5-110b",
+    "minicpm3-4b",
+    "hymba-1.5b",
+    "llama4-maverick-400b-a17b",
+    "qwen3-moe-235b-a22b",
+    "mamba2-370m",
+    "seamless-m4t-large-v2",
+]
+
+_MOD = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get_arch(arch_id: str):
+    if arch_id not in _MOD:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MOD[arch_id]}")
+    return mod.get_config()
+
+
+def get_smoke(arch_id: str):
+    mod = importlib.import_module(f"repro.configs.{_MOD[arch_id]}")
+    return mod.get_smoke()
+
+
+def list_archs():
+    return list(ARCHS)

@@ -1,0 +1,86 @@
+"""Shared architecture-spec plumbing: shapes, ArchSpec, input specs.
+
+The four assigned input shapes (LM-family):
+  train_4k     seq 4096,   global batch 256   (train_step)
+  prefill_32k  seq 32768,  global batch 32    (serve prefill)
+  decode_32k   cache 32768, global batch 128  (serve decode, 1 new token)
+  long_500k    cache 524288, global batch 1   (long-context decode;
+               sub-quadratic archs only — see DESIGN.md §Arch-applicability)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    kind: str                    # lm | encdec
+    model: Any                   # ModelCfg or EncDecCfg
+    prefix_len: int = 0          # VLM patch / stub prefix length (train/prefill)
+    sub_quadratic: bool = False  # may run long_500k
+    notes: str = ""
+
+    def supports(self, shape_name: str) -> bool:
+        if shape_name == "long_500k" and not self.sub_quadratic:
+            return False
+        return shape_name in SHAPES
+
+    # ---- input specs (ShapeDtypeStruct stand-ins, no allocation) ----
+    def input_specs(self, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+        s = SHAPES[shape_name]
+        B = s["batch"]
+        i32 = jnp.int32
+        sd = jax.ShapeDtypeStruct
+        if self.kind == "encdec":
+            # encoder frames are the modality stub; decoder sees text tokens
+            if s["kind"] == "train":
+                return {
+                    "frames": sd((B, s["seq"], self.model.d_model),
+                                 jnp.bfloat16),
+                    "tokens": sd((B, 512), i32),
+                    "targets": sd((B, 512), i32),
+                    "mask": sd((B, 512), i32),
+                }
+            if s["kind"] == "prefill":
+                return {"frames": sd((B, s["seq"], self.model.d_model),
+                                     jnp.bfloat16),
+                        "tokens": sd((B, 1), i32)}
+            # decode: cross-memory of length min(seq, 32768), self cache 4096
+            mem = min(s["seq"], 32768)
+            return {"token": sd((B, 1), i32),
+                    "memory": sd((B, mem, self.model.d_model), jnp.bfloat16),
+                    "pos": sd((), i32)}
+        # decoder-only LM
+        if s["kind"] == "train":
+            S = s["seq"] - self.prefix_len
+            spec = {"tokens": sd((B, S), i32), "targets": sd((B, S), i32),
+                    "mask": sd((B, S), i32)}
+            if self.prefix_len:
+                spec["prefix_embeds"] = sd((B, self.prefix_len,
+                                            self.model.d_model), jnp.bfloat16)
+            return spec
+        if s["kind"] == "prefill":
+            S = s["seq"] - self.prefix_len
+            spec = {"tokens": sd((B, S), i32)}
+            if self.prefix_len:
+                spec["prefix_embeds"] = sd((B, self.prefix_len,
+                                            self.model.d_model), jnp.bfloat16)
+            return spec
+        # decode: one token against a cache of capacity seq
+        return {"token": sd((B, 1), i32), "pos": sd((), i32)}
+
+    def cache_len(self, shape_name: str) -> int:
+        return SHAPES[shape_name]["seq"]

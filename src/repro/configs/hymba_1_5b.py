@@ -1,0 +1,40 @@
+"""Hymba-1.5B [arXiv:2411.13676]: parallel attention+SSM heads per layer;
+3 global-attention layers (first/middle/last), sliding window elsewhere."""
+import jax.numpy as jnp
+from repro.configs.common import ArchSpec
+from repro.models import layers as L
+from repro.models.lm import BlockCfg, ModelCfg
+
+WINDOW = 1024
+
+
+def _windows(n_layers):
+    w = [WINDOW] * n_layers
+    for g in (0, n_layers // 2, n_layers - 1):
+        w[g] = -1
+    return tuple(w)
+
+
+def get_config():
+    d = 1600
+    cfg = ModelCfg(
+        name="hymba-1.5b", d_model=d, n_layers=32, vocab=32001, d_ff=5504,
+        attn=L.AttnCfg(d_model=d, n_heads=25, n_kv=5, head_dim=64,
+                       window=WINDOW),
+        ssm=L.SSMCfg(d_model=d, d_inner=3200, n_heads=25, d_state=16),
+        block_pattern=(BlockCfg(kind="hybrid", mlp="dense", window=WINDOW),),
+        layer_windows=_windows(32))
+    return ArchSpec(arch_id="hymba-1.5b", family="hybrid", kind="lm",
+                    model=cfg, sub_quadratic=True,
+                    notes="meta tokens omitted (backbone spec only)")
+
+
+def get_smoke():
+    cfg = ModelCfg(
+        name="hymba-smoke", d_model=64, n_layers=2, vocab=128, d_ff=128,
+        attn=L.AttnCfg(d_model=64, n_heads=4, n_kv=2, head_dim=16, window=8),
+        ssm=L.SSMCfg(d_model=64, d_inner=128, n_heads=4, d_state=8, chunk=16),
+        block_pattern=(BlockCfg(kind="hybrid", mlp="dense", window=8),),
+        layer_windows=(-1, 8), dtype=jnp.float32, remat=False)
+    return ArchSpec(arch_id="hymba-1.5b", family="hybrid", kind="lm",
+                    model=cfg, sub_quadratic=True)

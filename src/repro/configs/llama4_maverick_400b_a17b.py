@@ -1,0 +1,33 @@
+"""Llama4-Maverick-400B-A17B [hf:meta-llama/Llama-4-*]: interleaved MoE
+(every other layer), 128 experts top-1, early fusion (text backbone here)."""
+import jax.numpy as jnp
+from repro.configs.common import ArchSpec
+from repro.models import layers as L
+from repro.models.lm import BlockCfg, ModelCfg
+
+
+def get_config():
+    d = 5120
+    cfg = ModelCfg(
+        name="llama4-maverick", d_model=d, n_layers=48, vocab=202048,
+        d_ff=8192,
+        attn=L.AttnCfg(d_model=d, n_heads=40, n_kv=8, head_dim=128),
+        moe=L.MoECfg(d_model=d, d_ff=8192, n_experts=128, top_k=1),
+        block_pattern=(BlockCfg(kind="attn", mlp="dense"),
+                       BlockCfg(kind="attn", mlp="moe")))
+    return ArchSpec(arch_id="llama4-maverick-400b-a17b", family="moe",
+                    kind="lm", model=cfg,
+                    notes="interleaved dense/MoE to hit 400B total at "
+                          "17B active; vision frontend out of scope")
+
+
+def get_smoke():
+    cfg = ModelCfg(
+        name="llama4-smoke", d_model=64, n_layers=2, vocab=128, d_ff=128,
+        attn=L.AttnCfg(d_model=64, n_heads=4, n_kv=2, head_dim=16),
+        moe=L.MoECfg(d_model=64, d_ff=128, n_experts=4, top_k=1),
+        block_pattern=(BlockCfg(kind="attn", mlp="dense"),
+                       BlockCfg(kind="attn", mlp="moe")),
+        dtype=jnp.float32, remat=False)
+    return ArchSpec(arch_id="llama4-maverick-400b-a17b", family="moe",
+                    kind="lm", model=cfg)

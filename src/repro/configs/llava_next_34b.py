@@ -1,0 +1,30 @@
+"""LLaVA-NeXT-34B [hf:llava-hf/llava-v1.6-*]: VLM; anyres image tiles enter
+as precomputed patch embeddings (frontend stub per task spec) prefixed to
+the text sequence of the 34B-class backbone."""
+import jax.numpy as jnp
+from repro.configs.common import ArchSpec
+from repro.models import layers as L
+from repro.models.lm import BlockCfg, ModelCfg
+
+PATCHES = 2048          # anyres tiling budget (stub embeddings)
+
+
+def get_config():
+    d = 7168
+    cfg = ModelCfg(
+        name="llava-next-34b", d_model=d, n_layers=60, vocab=64000,
+        d_ff=20480,
+        attn=L.AttnCfg(d_model=d, n_heads=56, n_kv=8, head_dim=128),
+        block_pattern=(BlockCfg(kind="attn", mlp="dense"),))
+    return ArchSpec(arch_id="llava-next-34b", family="vlm", kind="lm",
+                    model=cfg, prefix_len=PATCHES)
+
+
+def get_smoke():
+    cfg = ModelCfg(
+        name="llava-smoke", d_model=64, n_layers=2, vocab=128, d_ff=128,
+        attn=L.AttnCfg(d_model=64, n_heads=4, n_kv=2, head_dim=16),
+        block_pattern=(BlockCfg(kind="attn", mlp="dense"),),
+        dtype=jnp.float32, remat=False)
+    return ArchSpec(arch_id="llava-next-34b", family="vlm", kind="lm",
+                    model=cfg, prefix_len=16)

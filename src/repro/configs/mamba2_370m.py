@@ -1,0 +1,26 @@
+"""Mamba2-370M [arXiv:2405.21060]: attention-free SSD."""
+import jax.numpy as jnp
+from repro.configs.common import ArchSpec
+from repro.models import layers as L
+from repro.models.lm import BlockCfg, ModelCfg
+
+
+def get_config():
+    d = 1024
+    cfg = ModelCfg(
+        name="mamba2-370m", d_model=d, n_layers=48, vocab=50280, d_ff=0,
+        ssm=L.SSMCfg(d_model=d, d_inner=2 * d, n_heads=32, d_state=128),
+        block_pattern=(BlockCfg(kind="ssm", mlp="none"),))
+    return ArchSpec(arch_id="mamba2-370m", family="ssm", kind="lm",
+                    model=cfg, sub_quadratic=True)
+
+
+def get_smoke():
+    cfg = ModelCfg(
+        name="mamba2-smoke", d_model=64, n_layers=2, vocab=128, d_ff=0,
+        ssm=L.SSMCfg(d_model=64, d_inner=128, n_heads=4, d_state=16,
+                     chunk=32),
+        block_pattern=(BlockCfg(kind="ssm", mlp="none"),),
+        dtype=jnp.float32, remat=False)
+    return ArchSpec(arch_id="mamba2-370m", family="ssm", kind="lm",
+                    model=cfg, sub_quadratic=True)

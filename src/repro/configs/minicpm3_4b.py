@@ -1,0 +1,27 @@
+"""MiniCPM3-4B [hf:openbmb/MiniCPM3-4B]: MLA (latent KV) dense."""
+import jax.numpy as jnp
+from repro.configs.common import ArchSpec
+from repro.models import layers as L
+from repro.models.lm import BlockCfg, ModelCfg
+
+
+def get_config():
+    d = 2560
+    cfg = ModelCfg(
+        name="minicpm3-4b", d_model=d, n_layers=62, vocab=73448, d_ff=6400,
+        mla=L.MLACfg(d_model=d, n_heads=40, q_lora=768, kv_lora=256,
+                     qk_nope=64, qk_rope=32, v_dim=64),
+        block_pattern=(BlockCfg(kind="mla", mlp="dense"),))
+    return ArchSpec(arch_id="minicpm3-4b", family="dense", kind="lm",
+                    model=cfg, notes="MLA latent cache")
+
+
+def get_smoke():
+    cfg = ModelCfg(
+        name="minicpm3-smoke", d_model=64, n_layers=2, vocab=128, d_ff=128,
+        mla=L.MLACfg(d_model=64, n_heads=4, q_lora=32, kv_lora=16,
+                     qk_nope=16, qk_rope=8, v_dim=16),
+        block_pattern=(BlockCfg(kind="mla", mlp="dense"),),
+        dtype=jnp.float32, remat=False)
+    return ArchSpec(arch_id="minicpm3-4b", family="dense", kind="lm",
+                    model=cfg)

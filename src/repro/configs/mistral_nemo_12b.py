@@ -1,0 +1,28 @@
+"""Mistral-Nemo-12B [hf:mistralai/Mistral-Nemo-Base-2407]: 128k ctx dense."""
+import jax.numpy as jnp
+from repro.configs.common import ArchSpec
+from repro.models import layers as L
+from repro.models.lm import BlockCfg, ModelCfg
+
+
+def get_config():
+    d = 5120
+    cfg = ModelCfg(
+        name="mistral-nemo-12b", d_model=d, n_layers=40, vocab=131072,
+        d_ff=14336,
+        attn=L.AttnCfg(d_model=d, n_heads=32, n_kv=8, head_dim=128,
+                       rope_theta=1e6),
+        block_pattern=(BlockCfg(kind="attn", mlp="dense"),))
+    return ArchSpec(arch_id="mistral-nemo-12b", family="dense", kind="lm",
+                    model=cfg)
+
+
+def get_smoke():
+    cfg = ModelCfg(
+        name="nemo-smoke", d_model=64, n_layers=2, vocab=128, d_ff=160,
+        attn=L.AttnCfg(d_model=64, n_heads=4, n_kv=2, head_dim=16,
+                       rope_theta=1e6),
+        block_pattern=(BlockCfg(kind="attn", mlp="dense"),),
+        dtype=jnp.float32, remat=False)
+    return ArchSpec(arch_id="mistral-nemo-12b", family="dense", kind="lm",
+                    model=cfg)

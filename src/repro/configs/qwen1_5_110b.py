@@ -1,0 +1,28 @@
+"""Qwen1.5-110B [hf:Qwen/Qwen1.5-*]: dense GQA with QKV bias."""
+import jax.numpy as jnp
+from repro.configs.common import ArchSpec
+from repro.models import layers as L
+from repro.models.lm import BlockCfg, ModelCfg
+
+
+def get_config():
+    d = 8192
+    cfg = ModelCfg(
+        name="qwen1.5-110b", d_model=d, n_layers=80, vocab=152064,
+        d_ff=49152,
+        attn=L.AttnCfg(d_model=d, n_heads=64, n_kv=8, head_dim=128,
+                       qkv_bias=True),
+        block_pattern=(BlockCfg(kind="attn", mlp="dense"),))
+    return ArchSpec(arch_id="qwen1.5-110b", family="dense", kind="lm",
+                    model=cfg)
+
+
+def get_smoke():
+    cfg = ModelCfg(
+        name="qwen110b-smoke", d_model=64, n_layers=2, vocab=128, d_ff=192,
+        attn=L.AttnCfg(d_model=64, n_heads=4, n_kv=2, head_dim=16,
+                       qkv_bias=True),
+        block_pattern=(BlockCfg(kind="attn", mlp="dense"),),
+        dtype=jnp.float32, remat=False)
+    return ArchSpec(arch_id="qwen1.5-110b", family="dense", kind="lm",
+                    model=cfg)

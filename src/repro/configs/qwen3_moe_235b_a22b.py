@@ -1,0 +1,28 @@
+"""Qwen3-MoE-235B-A22B [hf:Qwen/Qwen3-*]: 128 experts top-8, every layer."""
+import jax.numpy as jnp
+from repro.configs.common import ArchSpec
+from repro.models import layers as L
+from repro.models.lm import BlockCfg, ModelCfg
+
+
+def get_config():
+    d = 4096
+    cfg = ModelCfg(
+        name="qwen3-moe-235b", d_model=d, n_layers=94, vocab=151936,
+        d_ff=0,
+        attn=L.AttnCfg(d_model=d, n_heads=64, n_kv=4, head_dim=128),
+        moe=L.MoECfg(d_model=d, d_ff=1536, n_experts=128, top_k=8),
+        block_pattern=(BlockCfg(kind="attn", mlp="moe"),))
+    return ArchSpec(arch_id="qwen3-moe-235b-a22b", family="moe", kind="lm",
+                    model=cfg)
+
+
+def get_smoke():
+    cfg = ModelCfg(
+        name="qwen3moe-smoke", d_model=64, n_layers=2, vocab=128, d_ff=0,
+        attn=L.AttnCfg(d_model=64, n_heads=4, n_kv=2, head_dim=16),
+        moe=L.MoECfg(d_model=64, d_ff=64, n_experts=4, top_k=2),
+        block_pattern=(BlockCfg(kind="attn", mlp="moe"),),
+        dtype=jnp.float32, remat=False)
+    return ArchSpec(arch_id="qwen3-moe-235b-a22b", family="moe", kind="lm",
+                    model=cfg)

@@ -1,0 +1,28 @@
+"""SeamlessM4T-large-v2 [arXiv:2308.11596]: enc-dec multimodal backbone;
+audio frontend is a stub (precomputed frame embeddings)."""
+import jax.numpy as jnp
+from repro.configs.common import ArchSpec
+from repro.models import layers as L
+from repro.models.encdec import EncDecCfg
+
+
+def get_config():
+    d = 1024
+    cfg = EncDecCfg(
+        name="seamless-m4t-large-v2", d_model=d, enc_layers=24,
+        dec_layers=24, vocab=256206, d_ff=8192,
+        attn=L.AttnCfg(d_model=d, n_heads=16, n_kv=16, head_dim=64))
+    return ArchSpec(arch_id="seamless-m4t-large-v2", family="audio",
+                    kind="encdec", model=cfg,
+                    notes="decode shapes: self-cache 4096 + cross memory "
+                          "to 32k encoder states (see DESIGN.md)")
+
+
+def get_smoke():
+    cfg = EncDecCfg(
+        name="seamless-smoke", d_model=64, enc_layers=2, dec_layers=2,
+        vocab=128, d_ff=128,
+        attn=L.AttnCfg(d_model=64, n_heads=4, n_kv=4, head_dim=16),
+        dtype=jnp.float32, remat=False)
+    return ArchSpec(arch_id="seamless-m4t-large-v2", family="audio",
+                    kind="encdec", model=cfg)

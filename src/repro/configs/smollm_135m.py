@@ -1,0 +1,27 @@
+"""SmolLM-135M [hf:HuggingFaceTB/SmolLM-135M]: llama-arch small dense."""
+import jax.numpy as jnp
+from repro.configs.common import ArchSpec
+from repro.models import layers as L
+from repro.models.lm import BlockCfg, ModelCfg
+
+
+def get_config():
+    d, H, KV = 576, 9, 3
+    cfg = ModelCfg(
+        name="smollm-135m", d_model=d, n_layers=30, vocab=49152, d_ff=1536,
+        attn=L.AttnCfg(d_model=d, n_heads=H, n_kv=KV, head_dim=d // H),
+        block_pattern=(BlockCfg(kind="attn", mlp="dense"),),
+        tie_embeddings=True)
+    return ArchSpec(arch_id="smollm-135m", family="dense", kind="lm",
+                    model=cfg)
+
+
+def get_smoke():
+    d, H, KV = 64, 4, 2
+    cfg = ModelCfg(
+        name="smollm-smoke", d_model=d, n_layers=2, vocab=128, d_ff=128,
+        attn=L.AttnCfg(d_model=d, n_heads=H, n_kv=KV, head_dim=16),
+        block_pattern=(BlockCfg(kind="attn", mlp="dense"),),
+        tie_embeddings=True, dtype=jnp.float32, remat=False)
+    return ArchSpec(arch_id="smollm-135m", family="dense", kind="lm",
+                    model=cfg)

@@ -1,0 +1,101 @@
+"""Versioned snapshot commitments (§4.3).
+
+com = (root_mk, root_cb):
+  root_mk — hierarchical Merkle root over the fixed-shape IVF layout:
+            leaf_{i,j} = Hash(i, j, f_{i,j}, item_{i,j}, code components),
+            root_i = MerkleTree(leaves of list i),
+            hash_i = Hash(i, mu_i, root_i),
+            root_mk = MerkleTree(hash_0..hash_{n_list-1}).
+  root_cb — Hash(canonical flattening of PQ codebooks).
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field as F
+from . import merkle, poseidon
+from .field import GF
+from .shaping import Snapshot
+
+
+class Commitment(NamedTuple):
+    root_mk: GF   # [4]
+    root_cb: GF   # [4]
+
+    def to_u64(self) -> np.ndarray:
+        return np.stack([F.to_u64(self.root_mk), F.to_u64(self.root_cb)])
+
+
+class CommitProverData(NamedTuple):
+    """Prover-side cache: everything needed to open probed lists."""
+    leaf_digests: GF     # [n_list, n, 4]
+    list_roots: GF       # [n_list, 4]
+    top_leaves: GF       # [n_list, 4]  (hash_i)
+    top_levels: List[GF]  # Merkle levels over top_leaves
+
+
+def leaf_hashes(codes, flags, items) -> GF:
+    """hash_{i,j} = Hash(i, j, f, item, code_0..code_{M-1}) batched.
+
+    codes int32 [n_list, n, M]; flags int32 [n_list, n]; items uint32.
+    Returns GF[n_list, n, 4].
+    """
+    n_list, n, M = codes.shape
+    ii = jnp.broadcast_to(jnp.arange(n_list, dtype=jnp.int32)[:, None], (n_list, n))
+    jj = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (n_list, n))
+    parts = [F.from_u32(ii), F.from_u32(jj), F.from_u32(flags),
+             F.from_u32(items)] + [F.from_u32(codes[..., m]) for m in range(M)]
+    flat = F.stack(parts, axis=-1)          # [n_list, n, 4+M]
+    return poseidon.hash_elements(flat)
+
+
+def batched_list_roots(leaves: GF) -> GF:
+    """Merkle-reduce axis 1 of GF[n_list, n, 4] -> GF[n_list, 4]."""
+    cur = leaves
+    while cur.lo.shape[1] > 1:
+        m = cur.lo.shape[1]
+        left = GF(cur.lo[:, 0:m:2], cur.hi[:, 0:m:2])
+        right = GF(cur.lo[:, 1:m:2], cur.hi[:, 1:m:2])
+        cur = poseidon.two_to_one(left, right)
+    return GF(cur.lo[:, 0], cur.hi[:, 0])
+
+
+def centroid_binding(centroids, list_roots: GF) -> GF:
+    """hash_i = Hash(i, mu_i, root_i) -> GF[n_list, 4]."""
+    n_list, D = centroids.shape
+    ii = F.from_u32(jnp.arange(n_list, dtype=jnp.int32))
+    mu = F.from_i32(centroids)                                  # [n_list, D]
+    parts = F.concat([F.stack([ii], axis=-1), mu, list_roots], axis=-1)
+    return poseidon.hash_elements(parts)
+
+
+def codebook_digest(codebooks) -> GF:
+    """root_cb = Hash(flatten(codebooks)) -> GF[4]."""
+    flat = F.from_i32(codebooks.reshape(-1))
+    return poseidon.hash_elements(flat)
+
+
+@jax.jit
+def _commit_impl(codes, flags, items, cents, books):
+    leaves = leaf_hashes(codes, flags, items)
+    list_roots = batched_list_roots(leaves)
+    top_leaves = centroid_binding(cents, list_roots)
+    top_levels = merkle.build_levels(top_leaves)
+    root_mk = GF(top_levels[-1].lo[0], top_levels[-1].hi[0])
+    root_cb = codebook_digest(books)
+    return leaves, list_roots, top_leaves, top_levels, root_mk, root_cb
+
+
+def commit_snapshot(snap: Snapshot):
+    """Returns (Commitment, CommitProverData)."""
+    leaves, list_roots, top_leaves, top_levels, root_mk, root_cb = _commit_impl(
+        jnp.asarray(snap.codes), jnp.asarray(snap.flags),
+        jnp.asarray(snap.items), jnp.asarray(snap.centroids),
+        jnp.asarray(snap.codebooks))
+    return (Commitment(root_mk=root_mk, root_cb=root_cb),
+            CommitProverData(leaf_digests=leaves, list_roots=list_roots,
+                             top_leaves=top_leaves, top_levels=top_levels))

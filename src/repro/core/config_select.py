@@ -1,0 +1,94 @@
+"""Algorithm 2: bin-pruned configuration search (§4.8).
+
+Minimizes the padded evaluation-domain bin G_B under a fixed code budget B
+and probing ratio r, doubling n_list while candidate codebook sizes remain
+inside the smallest bin; ties break toward larger (n_list, K) to preserve
+retrieval utility.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+from . import gates
+from .params import IVFPQParams
+
+
+@dataclass(frozen=True)
+class ZkOptChoice:
+    G_B: int
+    n_list: int
+    K: int
+    n_probe: int
+    n: int
+    M: int
+    G: int
+
+
+def _mk_params(D: int, N: int, r: float, n_list: int, K: int, B: int,
+               k: int, fp_bits: int = 16, t_cmp: int = 48) -> Optional[IVFPQParams]:
+    if K > 1 and B % int(math.log2(K)) != 0:
+        return None
+    M = B // max(1, int(math.log2(K))) if K > 1 else B
+    if D % M != 0:
+        return None
+    n = N // n_list
+    n_probe = max(1, int(round(r * n_list)))
+    if n_probe > n_list or n <= 0 or k > n_probe * n:
+        return None
+    try:
+        return IVFPQParams(D=D, n_list=n_list, n_probe=n_probe, n=n, M=M,
+                           K=K, k=k, fp_bits=fp_bits, t_cmp=t_cmp)
+    except AssertionError:
+        return None
+
+
+def select_config(D: int, N: int, B: int, r: float, k: int,
+                  n_list_max: int = 8192,
+                  candidate_K: Tuple[int, ...] = (2, 4, 16, 256),
+                  design: str = "multiset",
+                  gate_count: Optional[Callable] = None) -> ZkOptChoice:
+    """Pruned search for the configuration minimizing the padded bin G_B."""
+    gc = gate_count or (lambda p: gates.gate_count(p, design).G)
+
+    n_list = max(2, int(round(1.0 / r)))          # minimum feasible: n_probe = 1
+    Ks = list(candidate_K)
+
+    def eval_bin(nl: int, K: int) -> Optional[Tuple[int, int]]:
+        p = _mk_params(D, N, r, nl, K, B, k)
+        if p is None:
+            return None
+        G = gc(p)
+        return gates.padded_bin(G), G
+
+    results = {K: eval_bin(n_list, K) for K in Ks}
+    results = {K: v for K, v in results.items() if v is not None}
+    assert results, "no feasible configuration at the minimum layout"
+    G_B_star = min(v[0] for v in results.values())
+    live = [K for K, v in results.items() if v[0] == G_B_star]
+    best_K = max(live)
+    best = ZkOptChoice(G_B=G_B_star, n_list=n_list, K=best_K,
+                       n_probe=max(1, int(round(r * n_list))),
+                       n=N // n_list,
+                       M=(B // max(1, int(math.log2(best_K)))) if best_K > 1 else B,
+                       G=results[best_K][1])
+
+    while live and n_list < n_list_max:
+        n_list *= 2
+        still = []
+        res = {}
+        for K in live:
+            v = eval_bin(n_list, K)
+            if v is not None and v[0] <= G_B_star:
+                still.append(K)
+                res[K] = v
+        live = still
+        if live:
+            K = max(live)
+            best = ZkOptChoice(
+                G_B=G_B_star, n_list=n_list, K=K,
+                n_probe=max(1, int(round(r * n_list))), n=N // n_list,
+                M=(B // max(1, int(math.log2(K)))) if K > 1 else B,
+                G=res[K][1])
+    return best

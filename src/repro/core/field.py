@@ -1,0 +1,421 @@
+"""Goldilocks field arithmetic on uint32 limb pairs.
+
+p = 2^64 - 2^32 + 1 (0xFFFFFFFF_00000001).
+
+TPU vector units have no 64-bit integer multiply, so a field element is a pair
+of uint32 limbs ``GF(lo, hi)`` and every multiplication decomposes into 16-bit
+sub-limb products (which fit uint32 exactly: (2^16-1)^2 < 2^32). This runs
+unchanged inside Pallas kernels and under jit on CPU without jax_enable_x64.
+
+Reduction uses the Goldilocks identities  2^64 ≡ 2^32 - 1  and  2^96 ≡ -1
+(mod p), so a 128-bit product (x0..x3 little-endian 32-bit limbs) reduces as
+
+    n ≡ lo64 + h0·(2^32 - 1) - h1   (mod p),   hi64 = (h0, h1).
+
+All inputs/outputs of the public ops are canonical (< p).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# numpy scalars (not jnp) so Pallas kernel bodies see them as literals
+MASK16 = np.uint32(0xFFFF)
+P_LO = np.uint32(1)
+P_HI = np.uint32(0xFFFFFFFF)
+P_INT = (1 << 64) - (1 << 32) + 1
+# Multiplicative generator of F_p^* and 2-adicity (p - 1 = 2^32 * (2^32 - 1)).
+GENERATOR = 7
+TWO_ADICITY = 32
+
+u32 = jnp.uint32
+
+
+class GF(NamedTuple):
+    """Batched Goldilocks element: two equal-shape uint32 arrays (lo, hi)."""
+
+    lo: jax.Array
+    hi: jax.Array
+
+    @property
+    def shape(self):
+        return self.lo.shape
+
+
+# ---------------------------------------------------------------------------
+# Host-side conversions (numpy has uint64 regardless of jax x64 mode).
+# ---------------------------------------------------------------------------
+
+def from_u64(x) -> GF:
+    """numpy array / list of Python ints (each < 2^64) -> canonical GF."""
+    a = np.asarray(x, dtype=np.uint64) % np.uint64(P_INT)
+    lo = (a & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (a >> np.uint64(32)).astype(np.uint32)
+    return GF(jnp.asarray(lo), jnp.asarray(hi))
+
+
+def to_u64(x: GF) -> np.ndarray:
+    lo = np.asarray(jax.device_get(x.lo), dtype=np.uint64)
+    hi = np.asarray(jax.device_get(x.hi), dtype=np.uint64)
+    return lo | (hi << np.uint64(32))
+
+
+def zeros(shape=()) -> GF:
+    return GF(jnp.zeros(shape, u32), jnp.zeros(shape, u32))
+
+
+def ones(shape=()) -> GF:
+    return GF(jnp.ones(shape, u32), jnp.zeros(shape, u32))
+
+
+def full(shape, value: int) -> GF:
+    value %= P_INT
+    return GF(jnp.full(shape, value & 0xFFFFFFFF, u32),
+              jnp.full(shape, value >> 32, u32))
+
+
+# ---------------------------------------------------------------------------
+# 64-bit helpers on (lo, hi) uint32 pairs. Wrapping uint32 ops are exact mod
+# 2^32 in XLA, matching C semantics.
+# ---------------------------------------------------------------------------
+
+def _add64(alo, ahi, blo, bhi):
+    """(a + b) mod 2^64, plus carry-out bit (uint32)."""
+    lo = alo + blo
+    c = (lo < alo).astype(u32)
+    hi = ahi + bhi
+    c2 = (hi < ahi).astype(u32)
+    hi2 = hi + c
+    c3 = (hi2 < hi).astype(u32)
+    return lo, hi2, c2 | c3
+
+
+def _sub64(alo, ahi, blo, bhi):
+    """(a - b) mod 2^64, plus borrow-out bit (uint32)."""
+    lo = alo - blo
+    b1 = (alo < blo).astype(u32)
+    hi = ahi - bhi
+    b2 = (ahi < bhi).astype(u32)
+    hi2 = hi - b1
+    b3 = (hi < b1).astype(u32)
+    return lo, hi2, b2 | b3
+
+
+def _ge_p(lo, hi):
+    return (hi == P_HI) & (lo >= P_LO)
+
+
+def _cond_sub_p(lo, hi):
+    ge = _ge_p(lo, hi)
+    slo, shi, _ = _sub64(lo, hi, P_LO, P_HI)
+    return jnp.where(ge, slo, lo), jnp.where(ge, shi, hi)
+
+
+def _mul32(a, b):
+    """Exact 32x32 -> 64-bit product as (lo, hi) uint32."""
+    al = a & MASK16
+    ah = a >> 16
+    bl = b & MASK16
+    bh = b >> 16
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    hh = ah * bh
+    mid = lh + hl
+    mid_c = (mid < lh).astype(u32)           # wrapped?
+    lo = ll + (mid << 16)
+    lo_c = (lo < ll).astype(u32)
+    hi = hh + (mid >> 16) + (mid_c << 16) + lo_c
+    return lo, hi
+
+
+# ---------------------------------------------------------------------------
+# Field ops (canonical in, canonical out).
+# ---------------------------------------------------------------------------
+
+# ---------------------------------------------------------------------------
+# Optional native-uint64 fast path. The GF representation (uint32 limb
+# pairs) is unchanged; only the op internals switch. Activated when the
+# process enabled x64 (benchmark / prover subprocesses); the limb path is
+# the TPU-native default used by Pallas kernels and regular tests.
+# ---------------------------------------------------------------------------
+
+X64 = bool(jax.config.read("jax_enable_x64"))
+
+if X64:
+    _u64 = jnp.uint64
+    _MASK32 = np.uint64(0xFFFFFFFF)
+    _P64 = np.uint64(P_INT)
+
+    def _pack(a: GF):
+        return a.lo.astype(_u64) | (a.hi.astype(_u64) << np.uint64(32))
+
+    def _unpack(x) -> GF:
+        return GF((x & _MASK32).astype(u32), (x >> np.uint64(32)).astype(u32))
+
+    def _add_x64(a: GF, b: GF) -> GF:
+        x, y = _pack(a), _pack(b)
+        s = x + y
+        carry = s < x
+        s = jnp.where(carry, s + _MASK32, s)      # +2^64 ≡ +(2^32 - 1)
+        s = jnp.where(s >= _P64, s - _P64, s)
+        return _unpack(s)
+
+    def _sub_x64(a: GF, b: GF) -> GF:
+        x, y = _pack(a), _pack(b)
+        d = x - y
+        borrow = x < y
+        d = jnp.where(borrow, d - _MASK32, d)
+        return _unpack(d)
+
+    def _reduce_u64pair(lo, hi):
+        """lo + hi * 2^64 (mod p), lo/hi uint64 arrays -> canonical u64."""
+        lo = jnp.where(lo >= _P64, lo - _P64, lo)
+        h0 = hi & _MASK32
+        h1 = hi >> np.uint64(32)
+        # t = lo - h1 (mod p)
+        t = lo - h1
+        t = jnp.where(lo < h1, t - _MASK32, t)
+        # v = h0 * (2^32 - 1) < p
+        v = (h0 << np.uint64(32)) - h0
+        s = t + v
+        carry = s < t
+        s = jnp.where(carry, s + _MASK32, s)
+        s = jnp.where(s >= _P64, s - _P64, s)
+        return s
+
+    def _mul_x64(a: GF, b: GF) -> GF:
+        x, y = _pack(a), _pack(b)
+        x0 = x & _MASK32
+        x1 = x >> np.uint64(32)
+        y0 = y & _MASK32
+        y1 = y >> np.uint64(32)
+        p00 = x0 * y0
+        p01 = x0 * y1
+        p10 = x1 * y0
+        p11 = x1 * y1
+        mid = p01 + p10
+        midc = (mid < p01).astype(_u64)
+        lo = p00 + (mid << np.uint64(32))
+        loc = (lo < p00).astype(_u64)
+        hi = p11 + (mid >> np.uint64(32)) + (midc << np.uint64(32)) + loc
+        return _unpack(_reduce_u64pair(lo, hi))
+
+
+def add(a: GF, b: GF) -> GF:
+    if X64:
+        return _add_x64(a, b)
+    lo, hi, carry = _add64(a.lo, a.hi, b.lo, b.hi)
+    # carry means +2^64 ≡ +(2^32 - 1): add (0xFFFFFFFF, 0); cannot re-carry
+    # because a + b - 2^64 < 2^64 - 2^33.
+    lo2, hi2, _ = _add64(lo, hi,
+                         jnp.where(carry.astype(bool), np.uint32(0xFFFFFFFF),
+                                   np.uint32(0)), np.uint32(0))
+    lo3, hi3 = _cond_sub_p(lo2, hi2)
+    return GF(lo3, hi3)
+
+
+def sub(a: GF, b: GF) -> GF:
+    if X64:
+        return _sub_x64(a, b)
+    lo, hi, borrow = _sub64(a.lo, a.hi, b.lo, b.hi)
+    # borrow means -2^64 ≡ -(2^32 - 1): subtract 0xFFFFFFFF (cannot re-borrow
+    # since a - b + 2^64 > 2^32).
+    lo2, hi2, _ = _sub64(lo, hi,
+                         jnp.where(borrow.astype(bool), np.uint32(0xFFFFFFFF),
+                                   np.uint32(0)), np.uint32(0))
+    return GF(lo2, hi2)
+
+
+def neg(a: GF) -> GF:
+    return sub(zeros(a.shape), a)
+
+
+def _reduce128(x0, x1, x2, x3) -> GF:
+    """Reduce little-endian 128-bit (x0..x3) to canonical GF."""
+    lo, hi = _cond_sub_p(x0, x1)              # lo64 may be >= p once
+    t = sub(GF(lo, hi), GF(x3, jnp.zeros_like(x3)))          # - h1
+    # h0 * (2^32 - 1) = (h0 << 32) - h0  < p  always.
+    vlo, vhi, _ = _sub64(jnp.zeros_like(x2), x2, x2, jnp.zeros_like(x2))
+    return add(t, GF(vlo, vhi))
+
+
+def mul(a: GF, b: GF) -> GF:
+    if X64:
+        return _mul_x64(a, b)
+    p00l, p00h = _mul32(a.lo, b.lo)
+    p01l, p01h = _mul32(a.lo, b.hi)
+    p10l, p10h = _mul32(a.hi, b.lo)
+    p11l, p11h = _mul32(a.hi, b.hi)
+    x0 = p00l
+    t1 = p00h + p01l
+    c1a = (t1 < p00h).astype(u32)
+    t1b = t1 + p10l
+    c1b = (t1b < t1).astype(u32)
+    x1 = t1b
+    t2 = p01h + p10h
+    c2a = (t2 < p01h).astype(u32)
+    t2b = t2 + p11l
+    c2b = (t2b < t2).astype(u32)
+    t2c = t2b + c1a + c1b
+    c2c = (t2c < t2b).astype(u32)
+    x2 = t2c
+    x3 = p11h + c2a + c2b + c2c               # < 2^32, no overflow
+    return _reduce128(x0, x1, x2, x3)
+
+
+def square(a: GF) -> GF:
+    return mul(a, a)
+
+
+def mul_const(a: GF, c: int) -> GF:
+    """Multiply by a small host constant."""
+    c %= P_INT
+    cc = GF(jnp.broadcast_to(u32(c & 0xFFFFFFFF), a.shape),
+            jnp.broadcast_to(u32(c >> 32), a.shape))
+    return mul(a, cc)
+
+
+def pow7(a: GF) -> GF:
+    a2 = mul(a, a)
+    a3 = mul(a2, a)
+    a6 = mul(a3, a3)
+    return mul(a6, a)
+
+
+def pow_int(a: GF, e: int) -> GF:
+    """a ** e for a host-side integer exponent (square-and-multiply)."""
+    result = ones(a.shape)
+    base = a
+    while e > 0:
+        if e & 1:
+            result = mul(result, base)
+        base = mul(base, base)
+        e >>= 1
+    return result
+
+
+def inv(a: GF) -> GF:
+    return pow_int(a, P_INT - 2)
+
+
+def select(pred, a: GF, b: GF) -> GF:
+    """where(pred, a, b) elementwise; pred is bool array."""
+    return GF(jnp.where(pred, a.lo, b.lo), jnp.where(pred, a.hi, b.hi))
+
+
+def equal(a: GF, b: GF):
+    return (a.lo == b.lo) & (a.hi == b.hi)
+
+
+def concat(xs, axis=0) -> GF:
+    return GF(jnp.concatenate([x.lo for x in xs], axis=axis),
+              jnp.concatenate([x.hi for x in xs], axis=axis))
+
+
+def stack(xs, axis=0) -> GF:
+    return GF(jnp.stack([x.lo for x in xs], axis=axis),
+              jnp.stack([x.hi for x in xs], axis=axis))
+
+
+def reshape(a: GF, shape) -> GF:
+    return GF(a.lo.reshape(shape), a.hi.reshape(shape))
+
+
+def take(a: GF, idx, axis=0) -> GF:
+    return GF(jnp.take(a.lo, idx, axis=axis), jnp.take(a.hi, idx, axis=axis))
+
+
+def dynamic_slice(a: GF, start, size, axis=0) -> GF:
+    lo = jax.lax.dynamic_slice_in_dim(a.lo, start, size, axis)
+    hi = jax.lax.dynamic_slice_in_dim(a.hi, start, size, axis)
+    return GF(lo, hi)
+
+
+def from_u32(x) -> GF:
+    """Lift a uint32/int32 jax array (values < 2^32) into the field."""
+    xu = x.astype(u32)
+    return GF(xu, jnp.zeros_like(xu))
+
+
+def from_i32(x) -> GF:
+    """Lift a signed int32 jax array into the field (negatives -> p + x)."""
+    mag = from_u32(jnp.abs(x))
+    return select(x < 0, sub(zeros(x.shape), mag), mag)
+
+
+def from_u64_pair(lo, hi) -> GF:
+    """Lift uint32 limb pairs encoding values < p into canonical GF."""
+    return GF(lo.astype(u32), hi.astype(u32))
+
+
+def sum_gf(a: GF, axis=0) -> GF:
+    """Field sum along an axis via a log-depth pairwise reduction."""
+    n = a.lo.shape[axis]
+    if n == 1:
+        return GF(jnp.squeeze(a.lo, axis=axis), jnp.squeeze(a.hi, axis=axis))
+    half = n // 2
+    left = GF(jax.lax.slice_in_dim(a.lo, 0, half, axis=axis),
+              jax.lax.slice_in_dim(a.hi, 0, half, axis=axis))
+    right = GF(jax.lax.slice_in_dim(a.lo, half, 2 * half, axis=axis),
+               jax.lax.slice_in_dim(a.hi, half, 2 * half, axis=axis))
+    s = add(left, right)
+    if n % 2:
+        tail = GF(jax.lax.slice_in_dim(a.lo, 2 * half, n, axis=axis),
+                  jax.lax.slice_in_dim(a.hi, 2 * half, n, axis=axis))
+        s = concat([s, tail], axis=axis)
+    return sum_gf(s, axis=axis)
+
+
+def prod_gf(a: GF, axis=0) -> GF:
+    """Field product along an axis via log-depth pairwise reduction."""
+    n = a.lo.shape[axis]
+    if n == 1:
+        return GF(jnp.squeeze(a.lo, axis=axis), jnp.squeeze(a.hi, axis=axis))
+    half = n // 2
+    left = GF(jax.lax.slice_in_dim(a.lo, 0, half, axis=axis),
+              jax.lax.slice_in_dim(a.hi, 0, half, axis=axis))
+    right = GF(jax.lax.slice_in_dim(a.lo, half, 2 * half, axis=axis),
+               jax.lax.slice_in_dim(a.hi, half, 2 * half, axis=axis))
+    s = mul(left, right)
+    if n % 2:
+        tail = GF(jax.lax.slice_in_dim(a.lo, 2 * half, n, axis=axis),
+                  jax.lax.slice_in_dim(a.hi, 2 * half, n, axis=axis))
+        s = concat([s, tail], axis=axis)
+    return prod_gf(s, axis=axis)
+
+
+def cumprod_gf(a: GF, axis=0) -> GF:
+    """Inclusive cumulative field product (associative scan, log depth)."""
+
+    def combine(x, y):
+        return mul(GF(*x), GF(*y))
+
+    lo, hi = jax.lax.associative_scan(
+        lambda x, y: tuple(combine(x, y)), (a.lo, a.hi), axis=axis)
+    return GF(lo, hi)
+
+
+# Root-of-unity helpers (host side, Python ints).
+
+def primitive_root_of_unity(log_n: int) -> int:
+    assert log_n <= TWO_ADICITY
+    g = pow(GENERATOR, (P_INT - 1) >> log_n, P_INT)
+    return g
+
+
+def root_powers(log_n: int, inverse: bool = False) -> np.ndarray:
+    """All n-th roots of unity powers w^0..w^{n-1} as numpy uint64."""
+    n = 1 << log_n
+    w = primitive_root_of_unity(log_n)
+    if inverse:
+        w = pow(w, P_INT - 2, P_INT)
+    out = np.empty(n, dtype=np.uint64)
+    acc = 1
+    for i in range(n):
+        out[i] = acc
+        acc = (acc * w) % P_INT
+    return out

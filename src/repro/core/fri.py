@@ -1,0 +1,194 @@
+"""FRI low-degree test over Goldilocks cosets (vanilla STARK flavour).
+
+Commit phase: iteratively fold the codeword with transcript challenges
+(f'(y) = (f(s)+f(-s))/2 + chi * (f(s)-f(-s))/(2s), y = s^2), Merkle-commit
+every layer, and send the final low-degree polynomial's coefficients in the
+clear. Query phase: spot-check fold consistency at transcript-sampled
+indices with Merkle openings.
+
+Domains are g_i * H_{N_i} in natural order, so -s of index i is index
+i + N_i/2 and both map to index i (mod N_i/2) one layer down.
+
+All heavy paths (fold, tree build, batched opening/verification) are jitted
+once per shape; the per-query fold arithmetic is host-side Python ints
+(a few hundred scalar ops).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache, partial
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field as F
+from . import merkle, ntt, poseidon
+from .field import GF
+from .transcript import Transcript
+
+P = F.P_INT
+FINAL_SIZE = 32          # stop folding at this many evaluation points
+INV2 = pow(2, P - 2, P)
+
+
+@lru_cache(maxsize=None)
+def _half_domain_invs(log_n: int, shift: int) -> np.ndarray:
+    """(2 * s_i)^-1 for s_i = shift * w^i, i in [N/2) (numpy u64)."""
+    n = 1 << log_n
+    pts = F.root_powers(log_n).astype(object)
+    out = np.empty(n // 2, dtype=np.uint64)
+    for i in range(n // 2):
+        s = (int(pts[i]) * shift) % P
+        out[i] = pow(2 * s % P, P - 2, P)
+    return out
+
+
+@jax.jit
+def _commit_values(vals: GF):
+    """Merkle tree over single-element leaves: leaf = hash(v)."""
+    leaves = poseidon.hash_elements(GF(vals.lo[:, None], vals.hi[:, None]))
+    return merkle.build_levels(leaves)
+
+
+@jax.jit
+def _fold_jit(vals: GF, chi: GF, inv2s: GF) -> GF:
+    n = vals.lo.shape[-1]
+    half = n // 2
+    lo = GF(vals.lo[:half], vals.hi[:half])           # f(s)
+    hi = GF(vals.lo[half:], vals.hi[half:])           # f(-s)
+    even = F.mul(F.add(lo, hi), F.full((half,), INV2))
+    odd = F.mul(F.sub(lo, hi), inv2s)
+    chi_b = GF(jnp.broadcast_to(chi.lo, (half,)),
+               jnp.broadcast_to(chi.hi, (half,)))
+    return F.add(even, F.mul(chi_b, odd))
+
+
+@dataclass
+class FriProof:
+    layer_roots: List[np.ndarray]          # [L][4] u64 digests
+    final_coeffs: np.ndarray               # [FINAL_SIZE] u64
+    # layer-major query data:
+    query_values: List[np.ndarray]         # [L] u64 [Q, 2]   (v(i), v(i+N/2))
+    query_paths: List[np.ndarray]          # [L] u64 [Q, 2, depth, 4]
+
+
+def prove(values: GF, log_n: int, shift: int, tr: Transcript,
+          n_queries: int) -> FriProof:
+    """values: codeword on shift*H_{2^log_n} (natural order)."""
+    layers = [values]
+    trees = []
+    cur, cur_log, cur_shift = values, log_n, shift
+    while (1 << cur_log) > FINAL_SIZE:
+        tree = _commit_values(cur)
+        trees.append(tree)
+        tr.absorb(GF(tree[-1].lo[0], tree[-1].hi[0]))
+        chi = tr.challenge(1)
+        chi = GF(chi.lo[0], chi.hi[0])
+        inv2s = F.from_u64(_half_domain_invs(cur_log, cur_shift))
+        cur = _fold_jit(cur, chi, inv2s)
+        cur_log -= 1
+        cur_shift = (cur_shift * cur_shift) % P
+        layers.append(cur)
+
+    # final polynomial: interpolate the remaining codeword on its coset
+    coeffs = ntt.interpolate(cur)
+    inv_shift_pows = np.empty(1 << cur_log, dtype=np.uint64)
+    acc, inv_s = 1, pow(cur_shift, P - 2, P)
+    for i in range(1 << cur_log):
+        inv_shift_pows[i] = acc
+        acc = (acc * inv_s) % P
+    coeffs = F.mul(coeffs, F.from_u64(inv_shift_pows))
+    final_np = F.to_u64(coeffs)
+    tr.absorb(F.from_u64(final_np))
+
+    # queries, batched per layer
+    idxs = tr.challenge_indices(n_queries, 1 << log_n)
+    qvals, qpaths = [], []
+    targets = idxs.copy()
+    for li, tree in enumerate(trees):
+        nl = 1 << (log_n - li)
+        pos_a = (targets % (nl // 2)).astype(np.int64)
+        pos_b = pos_a + nl // 2
+        va = F.to_u64(GF(layers[li].lo[pos_a], layers[li].hi[pos_a]))
+        vb = F.to_u64(GF(layers[li].lo[pos_b], layers[li].hi[pos_b]))
+        pa = F.to_u64(merkle.open_paths_batch(tree, pos_a))  # [Q, d, 4]
+        pb = F.to_u64(merkle.open_paths_batch(tree, pos_b))
+        qvals.append(np.stack([va, vb], axis=1))
+        qpaths.append(np.stack([pa, pb], axis=1))
+        targets = pos_a
+    proof = FriProof(layer_roots=[F.to_u64(GF(t[-1].lo[0], t[-1].hi[0]))
+                                  for t in trees],
+                     final_coeffs=final_np, query_values=qvals,
+                     query_paths=qpaths)
+    proof._indices = idxs          # prover-side convenience (not serialized)
+    return proof
+
+
+def verify(proof: FriProof, log_n: int, shift: int, tr: Transcript,
+           n_queries: int, first_layer_check=None) -> bool:
+    """Replays the transcript; ``first_layer_check(pos_a, pos_b) -> (u64,
+    u64) arrays`` must return the expected layer-0 codeword values."""
+    n_layers = len(proof.layer_roots)
+    chis = []
+    for root in proof.layer_roots:
+        tr.absorb(F.from_u64(root))
+        chis.append(int(F.to_u64(tr.challenge(1))[0]))
+    tr.absorb(F.from_u64(proof.final_coeffs))
+    idxs = tr.challenge_indices(n_queries, 1 << log_n)
+
+    shifts = [shift]
+    for _ in range(n_layers):
+        shifts.append((shifts[-1] * shifts[-1]) % P)
+
+    targets = idxs.astype(object)
+    prev_expect = None
+    for li in range(n_layers):
+        nl = 1 << (log_n - li)
+        pos_a = np.array([int(t) % (nl // 2) for t in targets], dtype=np.int64)
+        pos_b = pos_a + nl // 2
+        vals = proof.query_values[li]           # [Q, 2]
+        paths = proof.query_paths[li]           # [Q, 2, d, 4]
+        # batched Merkle verification of both positions
+        all_pos = np.concatenate([pos_a, pos_b])
+        all_vals = np.concatenate([vals[:, 0], vals[:, 1]])
+        all_paths = np.concatenate([paths[:, 0], paths[:, 1]])
+        leaves = poseidon.hash_elements(
+            F.from_u64(all_vals.reshape(-1, 1)))
+        ok = merkle.verify_paths_batch(
+            F.from_u64(proof.layer_roots[li]), leaves, all_pos,
+            F.from_u64(all_paths))
+        if not bool(jnp.all(ok)):
+            return False
+        va = vals[:, 0].astype(object)
+        vb = vals[:, 1].astype(object)
+        if li == 0 and first_layer_check is not None:
+            exp_a, exp_b = first_layer_check(pos_a, pos_b)
+            if not (np.all(va == np.asarray(exp_a, dtype=object)) and
+                    np.all(vb == np.asarray(exp_b, dtype=object))):
+                return False
+        if prev_expect is not None:
+            at_target = np.where(np.array([int(t) for t in targets]) < nl // 2,
+                                 va, vb)
+            if not np.all(at_target == prev_expect):
+                return False
+        inv2s = _half_domain_invs(log_n - li, shifts[li]).astype(object)
+        even = [(int(a) + int(b)) * INV2 % P for a, b in zip(va, vb)]
+        odd = [(int(a) - int(b)) * int(inv2s[p]) % P
+               for a, b, p in zip(va, vb, pos_a)]
+        prev_expect = np.array([(e + chis[li] * o) % P
+                                for e, o in zip(even, odd)], dtype=object)
+        targets = pos_a.astype(object)
+
+    # final layer: evaluate final poly at the folded points
+    nl_final = 1 << (log_n - n_layers)
+    w_final = F.root_powers(log_n - n_layers).astype(object)
+    for t, expect in zip(targets, prev_expect):
+        pt = (shifts[n_layers] * int(w_final[int(t) % nl_final])) % P
+        acc = 0
+        for c in reversed(proof.final_coeffs.astype(object).tolist()):
+            acc = (acc * pt + int(c)) % P
+        if acc != int(expect):
+            return False
+    return True

@@ -1,0 +1,139 @@
+"""Analytic gate-count (row-count) model — paper §3.3 / §4.5 / Table 2.
+
+The paper reports plonky2 *rows*; plonky2 packs ~20 arithmetic ops per row
+(ArithmeticGate num_ops) and hashes one Poseidon permutation per row
+(PoseidonGate). We calibrate to those packing factors:
+
+    OPS_PER_ROW   = 20     mul/add ops per arithmetic row
+    CMP_ROWS      = 1.5    rows per range-bounded comparison (t_cmp-bit
+                           decomposition packed into base-sum rows)
+    lookup        = K/4    rows per in-circuit random access of a length-K
+                           table (RandomAccessGate routing packs poorly)
+    HASH_ROWS     = 1      rows per Poseidon permutation
+
+Absolute G therefore tracks the paper within ~2x; the *structure* —
+Eqs (1)-(5), the G_B binning, linear-in-n_list scaling, unimodal-in-K —
+is exact and is what the benchmarks assert.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .params import IVFPQParams
+from . import poseidon
+
+OPS_PER_ROW = 20.0
+CMP_ROWS = 1.5
+HASH_ROWS = 1.0
+RATE = poseidon.RATE
+
+
+def _arith(n_ops: float) -> float:
+    return n_ops / OPS_PER_ROW
+
+
+def _cmp(n: float) -> float:
+    return n * CMP_ROWS
+
+
+def _lookup_rows(K: int) -> float:
+    return max(K / 4.0, 0.05)
+
+
+def _compress(n_tuples: float, L: int) -> float:
+    return _arith(n_tuples * (2 * L - 2))
+
+
+def _set_eq(L: float) -> float:
+    return _arith(4 * L - 2)
+
+
+def _incl(n_max: float) -> float:
+    # two SetEq + (n_max - 1) comparisons + O(n_max) alignment constraints
+    return 2 * _set_eq(n_max) + _cmp(n_max - 1) + _arith(3 * n_max)
+
+
+def _hash_perms(n_elements: float) -> float:
+    """Sponge permutations to absorb n_elements (rate 8)."""
+    return math.ceil((n_elements + 1) / RATE)
+
+
+@dataclass(frozen=True)
+class GateBreakdown:
+    step1: float
+    step2: float
+    step3: float
+    step4: float
+    step5: float
+    commit: float
+
+    @property
+    def query(self) -> float:
+        return self.step1 + self.step2 + self.step3 + self.step4 + self.step5
+
+    @property
+    def total(self) -> float:
+        return self.query + self.commit
+
+    @property
+    def G(self) -> int:
+        return int(math.ceil(self.total))
+
+    @property
+    def G_B(self) -> int:
+        return 1 << max(1, math.ceil(math.log2(max(self.G, 2))))
+
+
+def commit_gates(p: IVFPQParams) -> float:
+    """Equation (3) under the hash-cost abstraction (rows = permutations)."""
+    books = _hash_perms(p.M * p.K * p.d)                      # root_cb
+    cent_bind = p.n_list * _hash_perms(p.D + 5)               # hash_i
+    top_tree = p.n_list - 1                                   # root_mk rebuild
+    probed_leaves = p.n_probe * p.n * _hash_perms(4 + p.M)
+    probed_trees = p.n_probe * (p.n - 1)
+    openings = p.n_probe * max(1, int(math.log2(p.n_list)))
+    return HASH_ROWS * (books + cent_bind + top_tree
+                        + probed_leaves + probed_trees + openings)
+
+
+def baseline_gates(p: IVFPQParams) -> GateBreakdown:
+    """Circuit-only design (Eq. 1 + Eq. 3)."""
+    s1 = _arith(2 * p.n_list * p.D)
+    # n_probe bubble passes over n_list elements, payload swap via Permute
+    s2 = _cmp(p.n_probe * p.n_list) + _arith(4 * p.n_probe * p.n_list)
+    s3 = _arith(2 * p.n_probe * p.K * p.D)
+    n_access = p.n_probe * p.n * p.M
+    s4 = n_access * _lookup_rows(p.K) + _arith(n_access + 4 * p.n_probe * p.n)
+    s5 = _cmp(p.k * p.N_sel) + _arith(4 * p.k * p.N_sel)
+    return GateBreakdown(s1, s2, s3, s4, s5, commit_gates(p))
+
+
+def multiset_gates(p: IVFPQParams) -> GateBreakdown:
+    """Multiset-based design (Eq. 2 + Eq. 3)."""
+    s1 = _arith(2 * p.n_list * p.D)
+    s2 = (_compress(2 * p.n_list, 2) + 2 * _set_eq(p.n_list)
+          + _cmp(p.n_list))
+    s3 = _arith(2 * p.n_probe * p.K * p.D)
+    n_max = p.n_probe * p.M * max(p.K, p.n)
+    s4 = (_compress(2 * n_max, 4) + _incl(n_max)
+          + _arith(p.n_probe * p.n * p.M + 4 * p.n_probe * p.n))
+    s5 = (_compress(2 * p.N_sel, 2) + 2 * _set_eq(p.N_sel) + _cmp(p.N_sel))
+    return GateBreakdown(s1, s2, s3, s4, s5, commit_gates(p))
+
+
+def gate_count(p: IVFPQParams, design: str = "multiset") -> GateBreakdown:
+    if design == "multiset":
+        return multiset_gates(p)
+    if design in ("baseline", "circuit-only"):
+        return baseline_gates(p)
+    raise ValueError(design)
+
+
+def padded_bin(G: float) -> int:
+    return 1 << max(1, math.ceil(math.log2(max(G, 2))))
+
+
+def prove_time_model(G_B: int, alpha: float = 1.36e-6, beta: float = 0.26) -> float:
+    """Paper's fitted T ≈ alpha * G_B * log2(G_B) + beta (seconds)."""
+    return alpha * G_B * math.log2(G_B) + beta

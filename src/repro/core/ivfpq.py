@@ -1,0 +1,204 @@
+"""Fixed-shape five-step IVF-PQ query semantics (§4.2) — pure JAX, exact.
+
+Distances are exact integers (< 2^(t_cmp-1)) computed on uint32 limb pairs,
+so the served top-k list is *identical* to the proved reference semantics.
+Ordering uses lexicographic ``lax.sort`` on (hi, lo) — no 64-bit ints needed,
+which keeps the whole pipeline TPU-native (see DESIGN.md §2).
+
+The returned trace carries every intermediate the witness generator needs
+(sorted sequences, LUTs, selected entries), mirroring the paper's design
+where the prover executes the pipeline off-circuit and the circuit verifies
+consistency.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field as F
+from .field import u32
+from .params import IVFPQParams
+from .shaping import Snapshot
+
+
+class U64(NamedTuple):
+    """Plain (non-modular) 64-bit unsigned values as uint32 limb pairs."""
+    lo: jax.Array
+    hi: jax.Array
+
+
+def u64_add(a: U64, b: U64) -> U64:
+    lo, hi, _ = F._add64(a.lo, a.hi, b.lo, b.hi)
+    return U64(lo, hi)
+
+
+def u64_sum(x: U64, axis: int) -> U64:
+    """Pairwise-tree exact sum along ``axis`` (values must stay < 2^64)."""
+    n = x.lo.shape[axis]
+    if n == 1:
+        return U64(jnp.squeeze(x.lo, axis), jnp.squeeze(x.hi, axis))
+    half = n // 2
+    sl = lambda arr, s, e: jax.lax.slice_in_dim(arr, s, e, axis=axis)
+    s = u64_add(U64(sl(x.lo, 0, half), sl(x.hi, 0, half)),
+                U64(sl(x.lo, half, 2 * half), sl(x.hi, half, 2 * half)))
+    if n % 2:
+        s = U64(jnp.concatenate([s.lo, sl(x.lo, 2 * half, n)], axis=axis),
+                jnp.concatenate([s.hi, sl(x.hi, 2 * half, n)], axis=axis))
+    return u64_sum(s, axis)
+
+
+def sq_dist_i32(x: jax.Array, y: jax.Array) -> U64:
+    """Exact squared L2 distance over the last axis of int32 arrays whose
+    entries are bounded by 2^17 (so squares < 2^34, sums < 2^44 for D<=1024)."""
+    diff = jnp.abs(x - y).astype(u32)
+    lo, hi = F._mul32(diff, diff)
+    return u64_sum(U64(lo, hi), axis=-1)
+
+
+def u64_to_f32(x: U64) -> jax.Array:
+    """Approximate float view (ranking display / fast path only)."""
+    return x.hi.astype(jnp.float32) * jnp.float32(2.0 ** 32) + x.lo.astype(jnp.float32)
+
+
+class QueryTrace(NamedTuple):
+    """Everything the five-step semantics produces (public output + witness)."""
+    items: jax.Array          # [k] uint32 — the public payload list
+    out_d: U64                # [k] — their distances (witness)
+    probes: jax.Array         # [n_probe] int32 — P(q) (witness)
+    cent_d: U64               # [n_list] — step-1 distances d_i
+    cent_order: jax.Array     # [n_list] int32 — sorted index permutation i_t
+    luts: U64                 # [n_probe, M, K] — step-3 tables
+    sel: U64                  # [n_probe, n, M] — selected LUT entries (step 4)
+    cand_d: U64               # [n_probe, n] — masked candidate distances D_ij
+    cand_items: jax.Array     # [n_probe, n] uint32 — item payloads of probed slots
+    cand_flags: jax.Array     # [n_probe, n] int32 — validity flags
+    cand_codes: jax.Array     # [n_probe, n, M] int32 — PQ codes of probed slots
+    cand_order: jax.Array     # [N_sel] int32 — step-5 sort permutation
+
+
+def search(params: IVFPQParams, centroids, codebooks, codes, flags, items,
+           q) -> QueryTrace:
+    """Execute the five-step fixed-shape semantics for one query.
+
+    All inputs are device arrays: centroids int32 [n_list, D], codebooks
+    int32 [M, K, d], codes int32 [n_list, n, M], flags int32 [n_list, n],
+    items uint32 [n_list, n], q int32 [D].
+    """
+    p = params
+    # Step 1: centroid distances.
+    cent_d = sq_dist_i32(q[None, :], centroids)                  # [n_list]
+
+    # Step 2: probe selection (full sort is a valid instance of the
+    # partial-order requirement).
+    idx = jnp.arange(p.n_list, dtype=jnp.int32)
+    # num_keys=3: deterministic tie-break by index, matching the proving
+    # layer's packed (dist * 2^20 + idx) ordering exactly.
+    s_hi, s_lo, order = jax.lax.sort((cent_d.hi, cent_d.lo, idx), num_keys=3)
+    probes = order[:p.n_probe]
+
+    # Step 3: ADC lookup tables for probed lists.
+    mu_p = jnp.take(centroids, probes, axis=0)                   # [n_probe, D]
+    resid = (q[None, :] - mu_p).reshape(p.n_probe, p.M, p.d)     # [np, M, d]
+    # dist(C[m,k], resid[i,m]) for all i,m,k
+    diff = jnp.abs(resid[:, :, None, :] - codebooks[None, :, :, :]).astype(u32)
+    dlo, dhi = F._mul32(diff, diff)
+    luts = u64_sum(U64(dlo, dhi), axis=-1)                       # [np, M, K]
+
+    # Step 4: candidate distances via code-indexed table sum + masking.
+    cand_codes = jnp.take(codes, probes, axis=0)                 # [np, n, M]
+    sel_lo = jnp.take_along_axis(
+        jnp.transpose(luts.lo, (0, 2, 1))[:, None, :, :],        # [np,1,K,M]
+        cand_codes[:, :, None, :], axis=2)[:, :, 0, :]           # [np,n,M]
+    sel_hi = jnp.take_along_axis(
+        jnp.transpose(luts.hi, (0, 2, 1))[:, None, :, :],
+        cand_codes[:, :, None, :], axis=2)[:, :, 0, :]
+    sel = U64(sel_lo, sel_hi)
+    adc = u64_sum(sel, axis=-1)                                  # [np, n]
+    cand_flags = jnp.take(flags, probes, axis=0)                 # [np, n]
+    cand_items = jnp.take(items, probes, axis=0)
+    valid = cand_flags.astype(bool)
+    dmax_lo = u32(p.d_max & 0xFFFFFFFF)
+    dmax_hi = u32(p.d_max >> 32)
+    cand_d = U64(jnp.where(valid, adc.lo, dmax_lo),
+                 jnp.where(valid, adc.hi, dmax_hi))
+
+    # Step 5: final top-k over the flattened scan-budget sequence.
+    flat_lo = cand_d.lo.reshape(-1)
+    flat_hi = cand_d.hi.reshape(-1)
+    flat_items = cand_items.reshape(-1)
+    fidx = jnp.arange(p.N_sel, dtype=jnp.int32)
+    # num_keys=3: tie-break by item id (proof layer sorts D * 2^20 + item).
+    o_hi, o_lo, o_items, cand_order = jax.lax.sort(
+        (flat_hi, flat_lo, flat_items, fidx), num_keys=3)
+    return QueryTrace(
+        items=o_items[:p.k], out_d=U64(o_lo[:p.k], o_hi[:p.k]),
+        probes=probes, cent_d=cent_d, cent_order=order, luts=luts, sel=sel,
+        cand_d=cand_d, cand_items=cand_items, cand_flags=cand_flags,
+        cand_codes=cand_codes, cand_order=cand_order)
+
+
+def search_snapshot(snap: Snapshot, q_enc: np.ndarray) -> QueryTrace:
+    return search(snap.params,
+                  jnp.asarray(snap.centroids), jnp.asarray(snap.codebooks),
+                  jnp.asarray(snap.codes), jnp.asarray(snap.flags),
+                  jnp.asarray(snap.items), jnp.asarray(q_enc))
+
+
+def search_batch(params: IVFPQParams, centroids, codebooks, codes, flags,
+                 items, qs) -> QueryTrace:
+    """vmapped multi-query search; qs int32 [Q, D]."""
+    fn = lambda q: search(params, centroids, codebooks, codes, flags, items, q)
+    return jax.vmap(fn)(qs)
+
+
+# ---------------------------------------------------------------------------
+# Host-side numpy oracle (int64 exact) — test reference for the JAX engine.
+# ---------------------------------------------------------------------------
+
+def ref_search_np(snap: Snapshot, q_enc: np.ndarray):
+    p = snap.params
+    q = q_enc.astype(np.int64)
+    cents = snap.centroids.astype(np.int64)
+    d_i = ((q[None] - cents) ** 2).sum(-1)                       # [n_list]
+    order = np.argsort(d_i, kind="stable")
+    probes = order[:p.n_probe]
+    books = snap.codebooks.astype(np.int64)                      # [M,K,d]
+    out = []
+    for i in probes:
+        resid = (q - cents[i]).reshape(p.M, p.d)
+        lut = ((books - resid[:, None, :]) ** 2).sum(-1)         # [M,K]
+        codes = snap.codes[i].astype(np.int64)                   # [n,M]
+        adc = lut[np.arange(p.M)[None, :], codes].sum(-1)        # [n]
+        dist = np.where(snap.flags[i].astype(bool), adc, p.d_max)
+        out.append((dist, snap.items[i]))
+    dists = np.concatenate([d for d, _ in out])
+    itms = np.concatenate([m for _, m in out])
+    o = np.lexsort((itms, dists))            # by dist, tie-break by item
+    return itms[o[:p.k]], dists[o[:p.k]], probes
+
+
+# ---------------------------------------------------------------------------
+# Std float pipeline (Experiment-1 baseline: std-IVF-PQ).
+# ---------------------------------------------------------------------------
+
+def float_search_np(cents: np.ndarray, books: np.ndarray, codes: np.ndarray,
+                    flags: np.ndarray, items: np.ndarray, q: np.ndarray,
+                    n_probe: int, k: int):
+    """Standard float32 IVF-PQ query (no fixed point), numpy."""
+    d_i = ((q[None] - cents) ** 2).sum(-1)
+    probes = np.argsort(d_i, kind="stable")[:n_probe]
+    M, K, d = books.shape
+    res = []
+    for i in probes:
+        resid = (q - cents[i]).reshape(M, d)
+        lut = ((books - resid[:, None, :]) ** 2).sum(-1)
+        adc = lut[np.arange(M)[None, :], codes[i]].sum(-1)
+        dist = np.where(flags[i].astype(bool), adc, np.float32(np.inf))
+        res.append((dist, items[i]))
+    dists = np.concatenate([x for x, _ in res])
+    itms = np.concatenate([m for _, m in res])
+    o = np.argsort(dists, kind="stable")
+    return itms[o[:k]]

@@ -1,0 +1,116 @@
+"""Poseidon-Merkle trees over Goldilocks digests (batched JAX).
+
+A digest is GF[..., 4]. Trees are built level-by-level (static shapes, jit
+friendly). Openings are sibling paths; verification recomputes the root by
+iterated two_to_one along the index bits.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field as F
+from . import poseidon
+from .field import GF
+
+
+@jax.jit
+def build_levels(leaves: GF) -> List[GF]:
+    """leaves: GF[n, 4], n a power of two. Returns [leaves, ..., root[1,4]]."""
+    n = leaves.lo.shape[0]
+    assert n & (n - 1) == 0, "leaf count must be a power of two"
+    levels = [leaves]
+    cur = leaves
+    while cur.lo.shape[0] > 1:
+        m = cur.lo.shape[0]
+        left = GF(cur.lo[0:m:2], cur.hi[0:m:2])
+        right = GF(cur.lo[1:m:2], cur.hi[1:m:2])
+        cur = poseidon.two_to_one(left, right)
+        levels.append(cur)
+    return levels
+
+
+def root(leaves: GF) -> GF:
+    return GF(*(x[0] for x in build_levels(leaves)[-1]))
+
+
+def open_path(levels: List[GF], index) -> GF:
+    """Sibling digests along the path for ``index``. Returns GF[depth, 4].
+
+    ``index`` may be a traced int32 scalar; gathers are dynamic.
+    """
+    sibs_lo, sibs_hi = [], []
+    idx = jnp.asarray(index, jnp.int32)
+    for lvl in levels[:-1]:
+        sib = idx ^ 1
+        sibs_lo.append(jnp.take(lvl.lo, sib, axis=0))
+        sibs_hi.append(jnp.take(lvl.hi, sib, axis=0))
+        idx = idx // 2
+    return GF(jnp.stack(sibs_lo, 0), jnp.stack(sibs_hi, 0))
+
+
+def verify_path(root_digest: GF, leaf: GF, index, path: GF):
+    """Recompute root from ``leaf`` at ``index`` with sibling ``path``.
+
+    Returns a bool scalar (all digest lanes equal).
+    """
+    idx = jnp.asarray(index, jnp.int32)
+    cur = leaf
+    depth = path.lo.shape[0]
+    for d in range(depth):
+        sib = GF(path.lo[d], path.hi[d])
+        bit = (idx >> d) & 1
+        left = F.select(bit == 0, cur, sib)
+        right = F.select(bit == 0, sib, cur)
+        cur = poseidon.two_to_one(left, right)
+    return jnp.all(F.equal(cur, root_digest))
+
+
+def root_from_path(leaf: GF, index, path: GF) -> GF:
+    idx = jnp.asarray(index, jnp.int32)
+    cur = leaf
+    for d in range(path.lo.shape[0]):
+        sib = GF(path.lo[d], path.hi[d])
+        bit = (idx >> d) & 1
+        left = F.select(bit == 0, cur, sib)
+        right = F.select(bit == 0, sib, cur)
+        cur = poseidon.two_to_one(left, right)
+    return cur
+
+
+# ---------------------------------------------------------------------------
+# Batched open/verify (jitted once per tree shape — the scalar versions
+# dispatch eagerly per level which is far too slow inside FRI query loops).
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def open_paths_batch(levels: List[GF], idxs) -> GF:
+    """Open many paths at once: idxs int32 [Q] -> GF[Q, depth, 4]."""
+    idxs = jnp.asarray(idxs, jnp.int32)
+    sibs_lo, sibs_hi = [], []
+    cur = idxs
+    for lvl in levels[:-1]:
+        sib = cur ^ 1
+        sibs_lo.append(jnp.take(lvl.lo, sib, axis=0))    # [Q, 4]
+        sibs_hi.append(jnp.take(lvl.hi, sib, axis=0))
+        cur = cur // 2
+    return GF(jnp.stack(sibs_lo, 1), jnp.stack(sibs_hi, 1))
+
+
+@jax.jit
+def verify_paths_batch(root_digest: GF, leaves: GF, idxs, paths: GF):
+    """leaves GF[Q,4], idxs [Q], paths GF[Q,depth,4] -> bool[Q]."""
+    idxs = jnp.asarray(idxs, jnp.int32)
+    cur = leaves
+    depth = paths.lo.shape[1]
+    for d in range(depth):
+        sib = GF(paths.lo[:, d], paths.hi[:, d])
+        bit = ((idxs >> d) & 1)[:, None]
+        left = F.select(bit == 0, cur, sib)
+        right = F.select(bit == 0, sib, cur)
+        cur = poseidon.two_to_one(left, right)
+    eq = F.equal(cur, GF(root_digest.lo[None, :], root_digest.hi[None, :]))
+    return jnp.all(eq, axis=-1)

@@ -1,0 +1,169 @@
+"""Number-theoretic transform over Goldilocks (2-adicity 32).
+
+Forward transform uses decimation-in-frequency (natural order in,
+bit-reversed out); the inverse uses decimation-in-time (bit-reversed in,
+natural out) — composing them avoids explicit bit-reversal permutations,
+the standard trick for STARK LDEs.
+
+All twiddle tables are precomputed host-side (numpy uint64) and cached per
+size; the butterflies are batched field ops, so they vectorize across
+polynomial columns and run under jit (and are the target of the
+``kernels/ntt_butterfly`` Pallas kernel).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field as F
+from .field import GF
+
+P = F.P_INT
+
+
+@lru_cache(maxsize=None)
+def _stage_twiddles(log_n: int, inverse: bool) -> Tuple[np.ndarray, ...]:
+    """Twiddles per stage. Stage s (DIF, s=0 first) has half-block size
+    n >> (s+1) and uses w_{n>>s}^j for j in [half)."""
+    n = 1 << log_n
+    w_all = F.root_powers(log_n, inverse=inverse)      # w^0..w^{n-1}
+    out = []
+    for s in range(log_n):
+        half = n >> (s + 1)
+        stride = 1 << s
+        out.append(w_all[::stride][:half].copy())
+    return tuple(out)
+
+
+@lru_cache(maxsize=None)
+def _n_inv(log_n: int) -> int:
+    return pow(1 << log_n, P - 2, P)
+
+
+def _butterfly_dif(x: GF, tw: GF, half: int) -> GF:
+    """x: GF[..., nblocks, 2*half] -> same shape after one DIF stage."""
+    lo = GF(x.lo[..., :half], x.hi[..., :half])
+    hi = GF(x.lo[..., half:], x.hi[..., half:])
+    a = F.add(lo, hi)
+    b = F.mul(F.sub(lo, hi), tw)
+    return GF(jnp.concatenate([a.lo, b.lo], axis=-1),
+              jnp.concatenate([a.hi, b.hi], axis=-1))
+
+
+def _butterfly_dit(x: GF, tw: GF, half: int) -> GF:
+    lo = GF(x.lo[..., :half], x.hi[..., :half])
+    hi = F.mul(GF(x.lo[..., half:], x.hi[..., half:]), tw)
+    a = F.add(lo, hi)
+    b = F.sub(lo, hi)
+    return GF(jnp.concatenate([a.lo, b.lo], axis=-1),
+              jnp.concatenate([a.hi, b.hi], axis=-1))
+
+
+def ntt(x: GF, inverse: bool = False) -> GF:
+    """Batched NTT along the last axis (power-of-two length).
+
+    forward: natural -> bit-reversed evaluation order
+    inverse: bit-reversed evaluations -> natural coefficients (scaled)
+    """
+    n = x.lo.shape[-1]
+    log_n = n.bit_length() - 1
+    assert 1 << log_n == n
+    batch = x.lo.shape[:-1]
+    tws = _stage_twiddles(log_n, inverse)
+
+    if not inverse:   # DIF: big blocks -> small
+        cur = x
+        for s in range(log_n):
+            half = n >> (s + 1)
+            nblocks = n // (2 * half)
+            r = GF(cur.lo.reshape(batch + (nblocks, 2 * half)),
+                   cur.hi.reshape(batch + (nblocks, 2 * half)))
+            tw = F.from_u64(tws[s])
+            r = _butterfly_dif(r, tw, half)
+            cur = GF(r.lo.reshape(batch + (n,)), r.hi.reshape(batch + (n,)))
+        return cur
+    else:             # DIT: small blocks -> big
+        cur = x
+        for s in range(log_n - 1, -1, -1):
+            half = n >> (s + 1)
+            nblocks = n // (2 * half)
+            r = GF(cur.lo.reshape(batch + (nblocks, 2 * half)),
+                   cur.hi.reshape(batch + (nblocks, 2 * half)))
+            tw = F.from_u64(tws[s])
+            r = _butterfly_dit(r, tw, half)
+            cur = GF(r.lo.reshape(batch + (n,)), r.hi.reshape(batch + (n,)))
+        ninv = F.full(x.lo.shape, _n_inv(log_n))
+        return F.mul(cur, ninv)
+
+
+# Coset low-degree extension ----------------------------------------------
+
+COSET_SHIFT = F.GENERATOR  # evaluate on g*H to keep Z_H(x) = x^n - 1 nonzero
+
+
+@lru_cache(maxsize=None)
+def _coset_powers(log_n: int, shift: int) -> np.ndarray:
+    n = 1 << log_n
+    out = np.empty(n, dtype=np.uint64)
+    acc = 1
+    for i in range(n):
+        out[i] = acc
+        acc = (acc * shift) % P
+    return out
+
+
+def interpolate(values: GF) -> GF:
+    """Trace values on H_n (natural order) -> coefficients.
+
+    forward-DIF produces bit-reversed evals; to interpolate natural-order
+    values we instead run inverse-DIT on bit-reversed input. Composing
+    lde(interpolate(v)) is self-consistent (see tests).
+    """
+    return ntt(_bit_reverse(values), inverse=True)
+
+
+def _bit_reverse(x: GF) -> GF:
+    n = x.lo.shape[-1]
+    log_n = n.bit_length() - 1
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int64)
+    for b in range(log_n):
+        rev |= ((idx >> b) & 1) << (log_n - 1 - b)
+    return GF(x.lo[..., rev], x.hi[..., rev])
+
+
+def lde(values: GF, blowup: int, shift: int = COSET_SHIFT) -> GF:
+    """Evaluations on H_n -> evaluations on shift * H_{blowup*n} (natural
+    order)."""
+    n = values.lo.shape[-1]
+    coeffs = interpolate(values)
+    big_n = n * blowup
+    pad = big_n - n
+    batch = coeffs.lo.shape[:-1]
+    coeffs = F.concat([coeffs, F.zeros(batch + (pad,))], axis=-1)
+    cs = F.from_u64(_coset_powers(big_n.bit_length() - 1, shift))
+    scaled = F.mul(coeffs, GF(jnp.broadcast_to(cs.lo, coeffs.lo.shape),
+                              jnp.broadcast_to(cs.hi, coeffs.hi.shape)))
+    return _bit_reverse(ntt(scaled, inverse=False))
+
+
+def eval_poly_at(coeffs: GF, x: GF) -> GF:
+    """Horner evaluation of coefficient vector GF[n] at scalar x (host loop)."""
+    n = coeffs.lo.shape[-1]
+    acc = F.zeros(())
+    for i in range(n - 1, -1, -1):
+        ci = GF(coeffs.lo[..., i], coeffs.hi[..., i])
+        acc = F.add(F.mul(acc, x), ci)
+    return acc
+
+
+def domain_points(log_n: int, shift: int = 1) -> np.ndarray:
+    """The evaluation domain shift * H_n in natural order (numpy u64)."""
+    pts = F.root_powers(log_n)
+    if shift != 1:
+        pts = (pts.astype(object) * shift % P).astype(np.uint64)
+    return pts

@@ -1,0 +1,74 @@
+"""Public IVF-PQ configuration (Table 1) and budget abstractions (§3.3)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class IVFPQParams:
+    """Fixed-shape IVF-PQ configuration. All knobs are public.
+
+    Notation follows the paper's Table 1.
+    """
+    D: int                  # embedding dimension
+    n_list: int             # number of inverted lists (coarse centroids)
+    n_probe: int            # lists probed per query
+    n: int                  # per-list padded capacity
+    M: int                  # PQ sub-quantizers
+    K: int                  # codebook size per sub-quantizer
+    k: int                  # top-k payload list size
+    t_cmp: int = 48         # comparison bit-length (range bound)
+    fp_bits: int = 16       # fixed-point encoding bits
+
+    def __post_init__(self):
+        assert self.D % self.M == 0, "D must be divisible by M"
+        assert self.n_probe <= self.n_list
+        assert self.k <= self.n_probe * self.n
+        # Range-bound check: worst-case valid distance must stay below the
+        # comparison bound 2^(t_cmp - 1) (paper §4.5, Cmp gadget).
+        worst = self.D * (2 ** (self.fp_bits + 1)) ** 2
+        assert worst < self.d_max, (
+            f"distances up to {worst} exceed d_max={self.d_max}; "
+            "raise t_cmp or lower fp_bits")
+
+    @property
+    def d(self) -> int:
+        return self.D // self.M
+
+    @property
+    def N(self) -> int:
+        """Padded capacity N = n_list * n."""
+        return self.n_list * self.n
+
+    @property
+    def N_sel(self) -> int:
+        """Scan budget N_sel = n_probe * n."""
+        return self.n_probe * self.n
+
+    @property
+    def B(self) -> int:
+        """Code budget B = M log2 K (bits per vector)."""
+        return self.M * (self.K.bit_length() - 1)
+
+    @property
+    def r(self) -> float:
+        """Probing ratio r = n_probe / n_list."""
+        return self.n_probe / self.n_list
+
+    @property
+    def d_max(self) -> int:
+        """Public masking constant for padded slots (< 2^(t_cmp-1))."""
+        return (1 << (self.t_cmp - 1)) - 1
+
+
+# The paper's Experiment-2 configurations (N, D, M, K, n_list, n_probe, k).
+def paper_config(name: str) -> IVFPQParams:
+    table = {
+        # name: (N, D, M, K, n_list, n_probe, k)
+        "basic": (8192, 128, 8, 16, 256, 16, 64),
+        "low-acc": (8192, 128, 8, 1, 16, 1, 1),
+        "large": (65536, 256, 16, 256, 512, 64, 128),
+    }
+    N, D, M, K, n_list, n_probe, k = table[name]
+    return IVFPQParams(D=D, n_list=n_list, n_probe=n_probe, n=N // n_list,
+                       M=M, K=K, k=k)

@@ -1,0 +1,246 @@
+"""Poseidon permutation + sponge over Goldilocks, batched JAX.
+
+Structure follows plonky2's Poseidon instance: width t=12 (rate 8,
+capacity 4), S-box x^7, 8 full rounds + 22 partial rounds, circulant MDS
+with small entries. Round constants are derived deterministically from
+SHA-256 of a domain tag (see DESIGN.md — calibration-grade constants;
+a production deployment would pin audited constants).
+
+The MDS layer exploits the small circulant entries: each product
+c * s (c < 2^7, s < 2^64) fits 96 bits, so one row is a carry-tracked
+96-bit accumulation followed by a single Goldilocks reduction —
+~12 cheap muls instead of 12 full field muls per output lane.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field as F
+from .field import GF, u32
+
+WIDTH = 12
+RATE = 8
+CAPACITY = 4
+FULL_ROUNDS = 8          # 4 at the start, 4 at the end
+PARTIAL_ROUNDS = 22
+N_ROUNDS = FULL_ROUNDS + PARTIAL_ROUNDS
+DIGEST_LEN = 4
+
+# plonky2 width-12 circulant MDS row + diagonal bump on lane 0.
+MDS_CIRC = [17, 15, 41, 16, 2, 28, 13, 13, 39, 18, 34, 20]
+MDS_DIAG = [8] + [0] * (WIDTH - 1)
+
+
+def _derive_round_constants() -> np.ndarray:
+    out = np.empty((N_ROUNDS, WIDTH), dtype=np.uint64)
+    for r in range(N_ROUNDS):
+        for i in range(WIDTH):
+            h = hashlib.sha256(f"repro-goldilocks-poseidon/rc/{r}/{i}".encode()).digest()
+            out[r, i] = int.from_bytes(h[:8], "little") % F.P_INT
+    return out
+
+
+ROUND_CONSTANTS = _derive_round_constants()          # [N_ROUNDS, WIDTH] u64
+
+# M[r][j] = circ[(j - r) mod 12] (+ diag[r] if r == j); out[r] = sum_j M[r][j] s[j]
+MDS_MATRIX = np.array(
+    [[MDS_CIRC[(j - r) % WIDTH] + (MDS_DIAG[r] if r == j else 0)
+      for j in range(WIDTH)] for r in range(WIDTH)], dtype=np.uint32)
+
+
+def _rc_gf(r: int) -> GF:
+    return F.from_u64(ROUND_CONSTANTS[r])
+
+
+_RC_ALL = F.from_u64(ROUND_CONSTANTS.reshape(-1)).lo.reshape(N_ROUNDS, WIDTH), \
+          F.from_u64(ROUND_CONSTANTS.reshape(-1)).hi.reshape(N_ROUNDS, WIDTH)
+
+
+def _add96(a, b):
+    """(a0,a1,a2) + (b0,b1,b2) over uint32 limbs (values < 2^96)."""
+    a0, a1, a2 = a
+    b0, b1, b2 = b
+    r0 = a0 + b0
+    c0 = (r0 < a0).astype(u32)
+    r1 = a1 + b1
+    c1 = (r1 < a1).astype(u32)
+    r1b = r1 + c0
+    c1b = (r1b < r1).astype(u32)
+    r2 = a2 + b2 + c1 + c1b
+    return r0, r1b, r2
+
+
+def _reduce96(r0, r1, r2) -> GF:
+    """r0 + r1*2^32 + r2*2^64 (mod p) -> canonical GF."""
+    lo, hi = F._cond_sub_p(r0, r1)
+    # r2 * (2^32 - 1) = (r2 << 32) - r2 < p
+    nz = (r2 > 0).astype(u32)
+    vlo = jnp.zeros_like(r2) - r2
+    vhi = r2 - nz
+    return F.add(GF(lo, hi), GF(vlo, vhi))
+
+
+# ROLL_IDX[r, i] = (i + r) % 12 so out[r] = sum_i circ[i] * s[(i+r)%12] (+diag).
+_ROLL_IDX = np.array([[(i + r) % WIDTH for i in range(WIDTH)]
+                      for r in range(WIDTH)], dtype=np.int32)
+# per-i coefficient applied to the rolled state, broadcast over r; the diag
+# bump lands on (r=0, i=0) only -> fold into a per-(r,i) matrix instead.
+_COEF = np.array([[MDS_CIRC[i] + (MDS_DIAG[r] if (i + r) % WIDTH == r else 0)
+                   for i in range(WIDTH)] for r in range(WIDTH)],
+                 dtype=np.uint32)
+# (i + r) % 12 == r  iff  i == 0, so diag only affects column i=0 at every r.
+
+
+def mds_layer(state: GF) -> GF:
+    """state: GF[..., 12] -> GF[..., 12] (vectorized over output lanes)."""
+    if F.X64:
+        return _mds_layer_x64(state)
+    rolled_lo = state.lo[..., _ROLL_IDX]          # [..., 12(r), 12(i)]
+    rolled_hi = state.hi[..., _ROLL_IDX]
+    coef = jnp.asarray(_COEF)                     # [12(r), 12(i)]
+    acc = (jnp.zeros_like(state.lo), jnp.zeros_like(state.lo),
+           jnp.zeros_like(state.lo))
+    for i in range(WIDTH):
+        c = coef[:, i]                            # [12] broadcasts over batch
+        l0, l1 = F._mul32(c, rolled_lo[..., i])
+        h0, h1 = F._mul32(c, rolled_hi[..., i])
+        m1 = l1 + h0
+        mc = (m1 < l1).astype(u32)
+        acc = _add96(acc, (l0, m1, h1 + mc))
+    o = _reduce96(*acc)
+    return GF(o.lo, o.hi)
+
+
+def _mds_layer_x64(state: GF) -> GF:
+    """Native-u64 MDS: 96-bit accumulation of small-constant products."""
+    u64 = jnp.uint64
+    mask32 = np.uint64(0xFFFFFFFF)
+    s = state.lo.astype(u64) | (state.hi.astype(u64) << np.uint64(32))
+    rolled = s[..., _ROLL_IDX]                    # [..., 12(r), 12(i)]
+    coef = jnp.asarray(_COEF.astype(np.uint64))   # [12, 12]
+    s0 = rolled & mask32
+    s1 = rolled >> np.uint64(32)
+    acc_lo = jnp.sum(coef * s0, axis=-1)          # <= 12 * 2^39 < 2^43
+    acc_hi = jnp.sum(coef * s1, axis=-1)
+    lo128 = acc_lo + ((acc_hi & mask32) << np.uint64(32))
+    carry = (lo128 < acc_lo).astype(u64)
+    hi128 = (acc_hi >> np.uint64(32)) + carry
+    red = F._reduce_u64pair(lo128, hi128)
+    return GF((red & mask32).astype(u32), (red >> np.uint64(32)).astype(u32))
+
+
+def _add_rc(state: GF, r: int) -> GF:
+    rc_lo, rc_hi = _RC_ALL
+    rc = GF(jnp.broadcast_to(rc_lo[r], state.lo.shape),
+            jnp.broadcast_to(rc_hi[r], state.hi.shape))
+    return F.add(state, rc)
+
+
+def _sbox_full(state: GF) -> GF:
+    return F.pow7(state)
+
+
+def _sbox_partial(state: GF) -> GF:
+    lane0 = GF(state.lo[..., 0], state.hi[..., 0])
+    s0 = F.pow7(lane0)
+    return GF(state.lo.at[..., 0].set(s0.lo), state.hi.at[..., 0].set(s0.hi))
+
+
+def _round(state: GF, rc: GF, partial: bool) -> GF:
+    state = F.add(state, rc)
+    state = _sbox_partial(state) if partial else _sbox_full(state)
+    return mds_layer(state)
+
+
+def _scan_rounds(state: GF, lo_rc, hi_rc, partial: bool) -> GF:
+    """lax.scan over a contiguous segment of rounds (one traced body)."""
+
+    def body(carry, rc):
+        st = GF(*carry)
+        rc_b = GF(jnp.broadcast_to(rc[0], st.lo.shape),
+                  jnp.broadcast_to(rc[1], st.hi.shape))
+        nst = _round(st, rc_b, partial)
+        return (nst.lo, nst.hi), None
+
+    (lo, hi), _ = jax.lax.scan(body, (state.lo, state.hi), (lo_rc, hi_rc))
+    return GF(lo, hi)
+
+
+_RC_LO = _RC_ALL[0]
+_RC_HI = _RC_ALL[1]
+_HALF = FULL_ROUNDS // 2
+
+
+def permute(state: GF) -> GF:
+    """Poseidon permutation on GF[..., 12]."""
+    state = _scan_rounds(state, _RC_LO[:_HALF], _RC_HI[:_HALF], False)
+    state = _scan_rounds(state, _RC_LO[_HALF:_HALF + PARTIAL_ROUNDS],
+                         _RC_HI[_HALF:_HALF + PARTIAL_ROUNDS], True)
+    state = _scan_rounds(state, _RC_LO[_HALF + PARTIAL_ROUNDS:],
+                         _RC_HI[_HALF + PARTIAL_ROUNDS:], False)
+    return state
+
+
+def round_states(state: GF):
+    """All N_ROUNDS+1 boundary states (used by the hash-table AIR trace)."""
+    half = _HALF
+    boundaries = [state]
+    for r in range(N_ROUNDS):
+        rc = GF(jnp.broadcast_to(_RC_LO[r], state.lo.shape),
+                jnp.broadcast_to(_RC_HI[r], state.hi.shape))
+        state = _round(state, rc, half <= r < half + PARTIAL_ROUNDS)
+        boundaries.append(state)
+    return boundaries
+
+
+def hash_elements(inputs: GF) -> GF:
+    """Sponge hash GF[..., L] -> GF[..., 4] (overwrite-mode, 10* padding)."""
+    L = inputs.lo.shape[-1]
+    batch = inputs.lo.shape[:-1]
+    npad = (-(L + 1)) % RATE
+    pad_one = F.ones(batch + (1,))
+    pad_zero = F.zeros(batch + (npad,))
+    x = F.concat([inputs, pad_one, pad_zero], axis=-1)
+    nblocks = x.lo.shape[-1] // RATE
+    state = F.zeros(batch + (WIDTH,))
+    if nblocks <= 2:
+        for b in range(nblocks):
+            blk = GF(x.lo[..., b * RATE:(b + 1) * RATE],
+                     x.hi[..., b * RATE:(b + 1) * RATE])
+            state = GF(state.lo.at[..., :RATE].set(blk.lo),
+                       state.hi.at[..., :RATE].set(blk.hi))
+            state = permute(state)
+    else:
+        # scan over blocks: [..., nblocks*RATE] -> [nblocks, ..., RATE]
+        perm = (len(batch),) + tuple(range(len(batch))) + (len(batch) + 1,)
+        blk_lo = jnp.transpose(
+            x.lo.reshape(batch + (nblocks, RATE)), perm)
+        blk_hi = jnp.transpose(
+            x.hi.reshape(batch + (nblocks, RATE)), perm)
+
+        def body(carry, blk):
+            st = GF(*carry)
+            st = GF(st.lo.at[..., :RATE].set(blk[0]),
+                    st.hi.at[..., :RATE].set(blk[1]))
+            st = permute(st)
+            return (st.lo, st.hi), None
+
+        (slo, shi), _ = jax.lax.scan(body, (state.lo, state.hi),
+                                     (blk_lo, blk_hi))
+        state = GF(slo, shi)
+    return GF(state.lo[..., :DIGEST_LEN], state.hi[..., :DIGEST_LEN])
+
+
+def two_to_one(left: GF, right: GF) -> GF:
+    """Merkle compression: GF[..., 4] x GF[..., 4] -> GF[..., 4]."""
+    batch = left.lo.shape[:-1]
+    state = F.zeros(batch + (WIDTH,))
+    state = GF(
+        state.lo.at[..., :4].set(left.lo).at[..., 4:8].set(right.lo),
+        state.hi.at[..., :4].set(left.hi).at[..., 4:8].set(right.hi))
+    state = permute(state)
+    return GF(state.lo[..., :DIGEST_LEN], state.hi[..., :DIGEST_LEN])

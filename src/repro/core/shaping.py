@@ -1,0 +1,214 @@
+"""Index shaping (offline): k-means, capacity-constrained rebalancing
+(Algorithm 1), fixed-point encoding, PQ training, fixed-shape snapshot build.
+
+The shaping phase is offline and data-dependent (variable-length clusters,
+iterative moves), so it runs host-side in numpy — the online query semantics
+and the proving backend are the fixed-shape JAX programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .params import IVFPQParams
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point encoding (§2.1 / Experiment 1 instantiation).
+# ---------------------------------------------------------------------------
+
+def fixed_point_encode(x: np.ndarray, v_max: float, bits: int = 16) -> np.ndarray:
+    """Encode real coordinates into signed fixed-point ints (round-to-nearest).
+
+    v is mapped to round((2^bits - 1) * v / v_max); |result| <= 2^bits - 1.
+    """
+    scale = (2 ** bits - 1) / v_max
+    return np.rint(np.clip(x, -v_max, v_max) * scale).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# k-means (k-means++ init + Lloyd) — used for IVF centroids and PQ codebooks.
+# ---------------------------------------------------------------------------
+
+def kmeans(x: np.ndarray, n_clusters: int, n_iter: int = 10,
+           seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (centroids [n_clusters, D], assignment [N])."""
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    if n_clusters >= n:
+        # degenerate: every point its own cluster, rest zero
+        cents = np.zeros((n_clusters, x.shape[1]), x.dtype)
+        cents[:n] = x
+        return cents, np.arange(n) % n_clusters
+    # k-means++ seeding on a subsample for speed
+    sub = x[rng.choice(n, size=min(n, max(4 * n_clusters, 1024)), replace=False)]
+    cents = [sub[rng.integers(len(sub))]]
+    d2 = np.full(len(sub), np.inf, dtype=np.float64)
+    for _ in range(1, n_clusters):
+        d2 = np.minimum(d2, ((sub - cents[-1]) ** 2).sum(-1))
+        probs = d2 / max(d2.sum(), 1e-30)
+        cents.append(sub[rng.choice(len(sub), p=probs)])
+    cents = np.stack(cents).astype(np.float32)
+    assign = None
+    for _ in range(n_iter):
+        assign = _assign_chunked(x, cents)
+        for c in range(n_clusters):
+            mask = assign == c
+            if mask.any():
+                cents[c] = x[mask].mean(0)
+    return cents, _assign_chunked(x, cents)
+
+
+def _assign_chunked(x: np.ndarray, cents: np.ndarray,
+                    chunk: int = 16384) -> np.ndarray:
+    """argmin_c ||x - cent_c||^2, chunked to bound memory."""
+    cn = (cents ** 2).sum(-1)
+    out = np.empty(x.shape[0], dtype=np.int64)
+    for s in range(0, x.shape[0], chunk):
+        xs = x[s:s + chunk]
+        d = cn[None, :] - 2.0 * xs @ cents.T
+        out[s:s + chunk] = d.argmin(-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: capacity-constrained cluster rebalancing.
+# ---------------------------------------------------------------------------
+
+def rebalance(x: np.ndarray, cents: np.ndarray, assign: np.ndarray,
+              cap: int) -> Tuple[np.ndarray, int]:
+    """Enforce per-cluster bound |X_i| <= cap by moving points out of
+    overfull clusters to nearest underfull clusters in increasing order of
+    distance regret Δ. Returns (new_assign, moved_count)."""
+    n_list = cents.shape[0]
+    assert n_list * cap >= x.shape[0], "padded capacity below dataset size"
+    assign = assign.copy()
+    counts = np.bincount(assign, minlength=n_list)
+    moved = 0
+    guard = 0
+    while (counts > cap).any():
+        guard += 1
+        assert guard <= 4 * n_list, "rebalance failed to converge"
+        over = np.nonzero(counts > cap)[0]
+        free = np.nonzero(counts < cap)[0]
+        cand_rows = []
+        for i in over:
+            pts = np.nonzero(assign == i)[0]
+            xv = x[pts]
+            d_free = ((xv[:, None, :] - cents[free][None, :, :]) ** 2).sum(-1) \
+                if len(pts) * len(free) * x.shape[1] < 5e7 else None
+            if d_free is None:
+                # chunk over points
+                d_free = np.empty((len(pts), len(free)), np.float32)
+                for s in range(0, len(pts), 1024):
+                    d_free[s:s + 1024] = (
+                        (xv[s:s + 1024, None, :] - cents[free][None]) ** 2).sum(-1)
+            tloc = d_free.argmin(-1)
+            tstar = free[tloc]
+            d_home = ((xv - cents[i]) ** 2).sum(-1)
+            delta = d_free[np.arange(len(pts)), tloc] - d_home
+            for p, t, dl in zip(pts, tstar, delta):
+                cand_rows.append((dl, p, i, t))
+        cand_rows.sort(key=lambda r: r[0])
+        for dl, p, i, t in cand_rows:
+            if counts[i] > cap and counts[t] < cap and assign[p] == i:
+                assign[p] = t
+                counts[i] -= 1
+                counts[t] += 1
+                moved += 1
+    return assign, moved
+
+
+# ---------------------------------------------------------------------------
+# PQ training + encoding (on residuals).
+# ---------------------------------------------------------------------------
+
+def train_pq(residuals: np.ndarray, M: int, K: int, seed: int = 0,
+             n_iter: int = 8) -> np.ndarray:
+    """Codebooks [M, K, d] from residual vectors [N, D]."""
+    N, D = residuals.shape
+    d = D // M
+    books = np.empty((M, K, d), np.float32)
+    for m in range(M):
+        blk = residuals[:, m * d:(m + 1) * d]
+        books[m], _ = kmeans(blk, K, n_iter=n_iter, seed=seed + 101 * m)
+    return books
+
+
+def pq_encode(residuals: np.ndarray, books: np.ndarray) -> np.ndarray:
+    """Codes [N, M] in [K]."""
+    N, D = residuals.shape
+    M, K, d = books.shape
+    codes = np.empty((N, M), np.int32)
+    for m in range(M):
+        blk = residuals[:, m * d:(m + 1) * d]
+        codes[:, m] = _assign_chunked(blk, books[m]).astype(np.int32)
+    return codes
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape snapshot.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Snapshot:
+    """A fixed-shape IVF-PQ snapshot (§4.2). Integer fields are the
+    fixed-point / field-embedded representation the circuits consume."""
+    params: IVFPQParams
+    centroids: np.ndarray    # int32 [n_list, D]   (signed fixed point)
+    codebooks: np.ndarray    # int32 [M, K, d]
+    codes: np.ndarray        # int32 [n_list, n, M] in [K]
+    flags: np.ndarray        # int32 [n_list, n] in {0, 1}
+    items: np.ndarray        # uint32 [n_list, n]  payload ids
+    v_max: float             # public scaling
+    moved: int = 0           # rebalancing relocations (reporting)
+    shaping_time_s: float = 0.0
+
+    @property
+    def n_valid(self) -> int:
+        return int(self.flags.sum())
+
+
+def build_snapshot(vectors: np.ndarray, item_ids: np.ndarray,
+                   params: IVFPQParams, seed: int = 0,
+                   kmeans_iters: int = 10) -> Snapshot:
+    """Full shaping pipeline: fixed-point encode -> k-means -> rebalance ->
+    PQ train/encode -> pad to fixed shape."""
+    t0 = time.time()
+    p = params
+    assert vectors.shape[1] == p.D
+    assert vectors.shape[0] <= p.N, "dataset exceeds padded capacity"
+    v_max = float(np.abs(vectors).max()) or 1.0
+
+    # Encode first so the whole pipeline sees the circuit's representation.
+    enc = fixed_point_encode(vectors, v_max, p.fp_bits).astype(np.float32)
+    cents_f, assign = kmeans(enc, p.n_list, n_iter=kmeans_iters, seed=seed)
+    assign, moved = rebalance(enc, cents_f, assign, p.n)
+    # Re-snap centroids to the final assignment, then quantize them too.
+    for c in range(p.n_list):
+        mask = assign == c
+        if mask.any():
+            cents_f[c] = enc[mask].mean(0)
+    centroids = np.rint(cents_f).astype(np.int32)
+
+    residuals = enc - centroids[assign].astype(np.float32)
+    books_f = train_pq(residuals, p.M, p.K, seed=seed)
+    codebooks = np.rint(books_f).astype(np.int32)
+    codes_flat = pq_encode(residuals, codebooks.astype(np.float32))
+
+    codes = np.zeros((p.n_list, p.n, p.M), np.int32)
+    flags = np.zeros((p.n_list, p.n), np.int32)
+    items = np.zeros((p.n_list, p.n), np.uint32)
+    for c in range(p.n_list):
+        pts = np.nonzero(assign == c)[0]
+        cnt = len(pts)
+        assert cnt <= p.n
+        codes[c, :cnt] = codes_flat[pts]
+        flags[c, :cnt] = 1
+        items[c, :cnt] = item_ids[pts]
+    return Snapshot(params=p, centroids=centroids, codebooks=codebooks,
+                    codes=codes, flags=flags, items=items, v_max=v_max,
+                    moved=moved, shaping_time_s=time.time() - t0)

@@ -1,0 +1,504 @@
+"""Multi-table STARK engine (vanilla quotient + FRI) over Goldilocks.
+
+A statement is a list of AIR tables sharing one Fiat-Shamir transcript and
+one set of multiset challenges (alpha, beta, gamma) — cross-table LogUp
+accumulators balance through claimed boundary values checked at the
+statement layer (circuits.py).
+
+Per table:
+  phase1 commit -> (shared challenges) -> phase2 commit + claimed boundary
+  values -> composition challenge -> quotient Q on the LDE coset -> FRI(Q)
+  -> trace-row openings at the FRI layer-0 query pairs (plus next-row
+  openings for transition constraints).
+
+ZK: traces are padded with random rows beyond the last active row (layout
+selectors vanish there) and every committed row carries a random salt
+column, so openings reveal only salted hashes and blinded codeword points
+(calibration-grade; see DESIGN.md).
+
+All hot paths are jitted once per (layout, shape) and cached on the table.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dfield
+from functools import lru_cache
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field as F
+from . import fri, merkle, ntt, poseidon
+from .field import GF
+from .transcript import Transcript
+
+P = F.P_INT
+import os as _os
+_DBG = _os.environ.get("REPRO_STARK_DEBUG") == "1"
+
+
+def _dbg(msg):
+    if _DBG:
+        print(f"[stark-debug] {msg}", flush=True)
+
+_lde_jit = jax.jit(ntt.lde, static_argnums=(1, 2))
+_inv_jit = jax.jit(F.inv)
+
+
+# --------------------------------------------------------------------------
+# AIR specification
+# --------------------------------------------------------------------------
+
+@dataclass
+class Boundary:
+    group: str        # "p1" | "p2"
+    col: int
+    row: int
+
+
+@dataclass
+class AirTable:
+    name: str
+    log_n: int
+    blowup: int               # 4 for deg<=3, 8 for deg<=7
+    max_degree: int
+    pre: GF                   # [n_pre, n] preprocessed columns (public)
+    n_phase1: int
+    n_phase2: int
+    # eval(pre, snap, p1, p2, ch) with group dicts {offset: GF cols}
+    eval_constraints: Callable = None
+    boundaries: List[Boundary] = dfield(default_factory=list)
+    offsets: Tuple[int, ...] = (1,)     # forward row offsets beyond 0
+    n_snap: int = 0           # precommitted (snapshot) columns
+    _composer: Callable = None
+    _pre_lde: GF = None
+    _snap_cache: tuple = None   # (cols, lde, levels, root_u64)
+
+    @property
+    def n(self) -> int:
+        return 1 << self.log_n
+
+    @property
+    def domain(self) -> int:
+        return self.n * self.blowup
+
+    def pre_lde(self) -> GF:
+        if self._pre_lde is None:
+            if self.pre.lo.shape[0]:
+                self._pre_lde = _lde_jit(self.pre, self.blowup)
+            else:
+                N = self.domain
+                self._pre_lde = GF(jnp.zeros((0, N), jnp.uint32),
+                                   jnp.zeros((0, N), jnp.uint32))
+        return self._pre_lde
+
+    def composer(self) -> Callable:
+        """Jitted quotient evaluator, cached per layout."""
+        if self._composer is not None:
+            return self._composer
+        bnd = list(self.boundaries)
+        eval_fn = self.eval_constraints
+        offs = (0,) + tuple(self.offsets)
+
+        @jax.jit
+        def compose(pre_g, snap_g, p1_g, p2_g, alpha, beta, gamma, lam_pows,
+                    claimed, xs, zh, bnd_invs):
+            # group args: tuples of column stacks, one per offset.
+            # bnd_invs: GF[nb, L] = (xs - pt_j)^-1, precomputed (inverse
+            # chains make XLA:CPU compilation pathological when inlined).
+            shape = xs.lo.shape
+            ch = {"alpha": alpha, "beta": beta, "gamma": gamma}
+            pre = dict(zip(offs, pre_g))
+            snap = dict(zip(offs, snap_g))
+            p1 = dict(zip(offs, p1_g))
+            p2 = dict(zip(offs, p2_g))
+            cons = eval_fn(pre, snap, p1, p2, ch)
+            acc = F.zeros(shape)
+            for i, c in enumerate(cons):
+                lp = GF(jnp.broadcast_to(lam_pows.lo[i], shape),
+                        jnp.broadcast_to(lam_pows.hi[i], shape))
+                acc = F.add(acc, F.mul(lp, c))
+            acc = F.mul(acc, zh)
+            nc = len(cons)
+            for j in range(len(bnd)):
+                grp = {"p1": p1_g, "p2": p2_g, "snap": snap_g}[bnd[j].group][0]
+                col = GF(grp.lo[bnd[j].col], grp.hi[bnd[j].col])
+                v = GF(jnp.broadcast_to(claimed.lo[j], shape),
+                       jnp.broadcast_to(claimed.hi[j], shape))
+                term = F.mul(F.sub(col, v), GF(bnd_invs.lo[j], bnd_invs.hi[j]))
+                lp = GF(jnp.broadcast_to(lam_pows.lo[nc + j], shape),
+                        jnp.broadcast_to(lam_pows.hi[nc + j], shape))
+                acc = F.add(acc, F.mul(lp, term))
+            return acc
+
+        self._composer = compose
+        return compose
+
+    def boundary_invs(self, xs_u64: np.ndarray) -> GF:
+        """(xs - pt_j)^-1 for every boundary, via host modular inverse when
+        the point set is small, else the jitted vectorized inverse."""
+        w_n = F.root_powers(self.log_n)
+        pts = [int(w_n[b.row]) for b in self.boundaries]
+        if not pts:
+            return GF(jnp.zeros((0, len(xs_u64)), jnp.uint32),
+                      jnp.zeros((0, len(xs_u64)), jnp.uint32))
+        if len(xs_u64) <= 256:
+            out = np.empty((len(pts), len(xs_u64)), dtype=np.uint64)
+            xso = xs_u64.astype(object)
+            for j, pt in enumerate(pts):
+                for i, x in enumerate(xso):
+                    out[j, i] = pow((int(x) - pt) % P, P - 2, P)
+            return F.from_u64(out)
+        xs_gf = F.from_u64(xs_u64)
+        rows = []
+        for pt in pts:
+            diff = F.sub(xs_gf, F.full(xs_gf.lo.shape, pt))
+            rows.append(_inv_jit(diff))
+        return GF(jnp.stack([r.lo for r in rows]),
+                  jnp.stack([r.hi for r in rows]))
+
+    def n_terms(self, n_constraints: int) -> int:
+        return n_constraints + len(self.boundaries)
+
+
+@dataclass
+class TableWitness:
+    phase1: GF                                   # [n_phase1, n]
+    phase2_fn: Callable                          # ch -> GF [n_phase2, n]
+    snap: GF = None                              # [n_snap, n] precommitted
+
+
+@dataclass
+class TableProof:
+    p1_root: np.ndarray
+    p2_root: np.ndarray
+    claimed: np.ndarray                          # boundary values, u64 [nb]
+    fri_proof: fri.FriProof
+    # group -> (positions [4Q], values [4Q, c], paths [4Q, depth, 4])
+    openings: Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+    snap_root: np.ndarray = None
+
+
+@dataclass
+class Proof:
+    tables: List[TableProof]
+    n_queries: int
+
+    def size_bytes(self) -> int:
+        total = 0
+
+        def walk(x):
+            nonlocal total
+            if isinstance(x, np.ndarray):
+                total += x.nbytes
+            elif isinstance(x, (list, tuple)):
+                for y in x:
+                    walk(y)
+            elif isinstance(x, dict):
+                for y in x.values():
+                    walk(y)
+            elif hasattr(x, "__dataclass_fields__"):
+                walk(vars(x))
+        walk(vars(self))
+        return total
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+@jax.jit
+def commit_columns(cols: GF):
+    """Merkle-commit rows of GF[c, N]: leaf = H(row). Returns levels."""
+    rows = GF(jnp.transpose(cols.lo), jnp.transpose(cols.hi))   # [N, c]
+    leaves = poseidon.hash_elements(rows)
+    return merkle.build_levels(leaves)
+
+
+def _root(levels) -> GF:
+    return GF(levels[-1].lo[0], levels[-1].hi[0])
+
+
+@lru_cache(maxsize=None)
+def _zh_inv_cycle(log_n: int, blowup: int) -> np.ndarray:
+    """(Z_H(x))^-1 on the coset domain cycles with period ``blowup``."""
+    n = 1 << log_n
+    N = n * blowup
+    w = F.primitive_root_of_unity(N.bit_length() - 1)
+    g_n = pow(F.GENERATOR, n, P)
+    w_n = pow(w, n, P)
+    out = np.empty(blowup, dtype=np.uint64)
+    acc = g_n
+    for i in range(blowup):
+        out[i] = pow((acc - 1) % P, P - 2, P)
+        acc = (acc * w_n) % P
+    return out
+
+
+@lru_cache(maxsize=None)
+def _domain_np(log_domain: int) -> np.ndarray:
+    return ntt.domain_points(log_domain, shift=ntt.COSET_SHIFT)
+
+
+def _lam_pows(lam: int, n_terms: int) -> GF:
+    out = np.empty(n_terms, dtype=np.uint64)
+    acc = 1
+    for i in range(n_terms):
+        out[i] = acc
+        acc = (acc * lam) % P
+    return F.from_u64(out)
+
+
+def _gf_scalar(g: GF, i: int) -> GF:
+    return GF(g.lo[i], g.hi[i])
+
+
+def _positions(idxs: np.ndarray, N: int, blowup: int,
+               offsets: Tuple[int, ...]) -> np.ndarray:
+    """Block order: [a, b] then per offset k: [a+k*blowup, b+k*blowup]."""
+    half = N // 2
+    a = idxs % half
+    b = a + half
+    blocks = [a, b]
+    for k in offsets:
+        blocks.append((a + k * blowup) % N)
+        blocks.append((b + k * blowup) % N)
+    return np.concatenate(blocks).astype(np.int64)
+
+
+@jax.jit
+def _gather_rows(cols: GF, pos) -> GF:
+    return GF(cols.lo[:, pos].T, cols.hi[:, pos].T)     # [P, c]
+
+
+# --------------------------------------------------------------------------
+# prove / verify
+# --------------------------------------------------------------------------
+
+def prove(tables: List[AirTable], witnesses: List[TableWitness],
+          tr: Transcript, n_queries: int = 24) -> Proof:
+    # stage 0/1: snapshot + phase-1 commitments
+    snap_lde, snap_levels = [], []
+    for t, w in zip(tables, witnesses):
+        if t.n_snap:
+            if t._snap_cache is None:
+                sl = _lde_jit(w.snap, t.blowup)
+                lev = commit_columns(sl)
+                t._snap_cache = (w.snap, sl, lev, F.to_u64(_root(lev)))
+            _, sl, lev, _rt = t._snap_cache
+            snap_lde.append(sl)
+            snap_levels.append(lev)
+            tr.absorb(_root(lev))
+        else:
+            snap_lde.append(GF(jnp.zeros((0, t.domain), jnp.uint32),
+                               jnp.zeros((0, t.domain), jnp.uint32)))
+            snap_levels.append(None)
+    p1_lde, p1_levels = [], []
+    for t, w in zip(tables, witnesses):
+        assert w.phase1.lo.shape == (t.n_phase1, t.n), (
+            w.phase1.lo.shape, (t.n_phase1, t.n))
+        lde_cols = _lde_jit(w.phase1, t.blowup)
+        levels = commit_columns(lde_cols)
+        p1_lde.append(lde_cols)
+        p1_levels.append(levels)
+        tr.absorb(_root(levels))
+
+    # stage 2: shared multiset challenges
+    chv = tr.challenge(3)
+    ch = {"alpha": _gf_scalar(chv, 0), "beta": _gf_scalar(chv, 1),
+          "gamma": _gf_scalar(chv, 2)}
+
+    # stage 3: phase-2 commitments + claimed boundary values
+    p2_cols, p2_lde, p2_levels, claimed_all = [], [], [], []
+    for t, w in zip(tables, witnesses):
+        cols = w.phase2_fn(ch)
+        assert cols.lo.shape == (t.n_phase2, t.n)
+        lde_cols = _lde_jit(cols, t.blowup)
+        levels = commit_columns(lde_cols)
+        p2_cols.append(cols)
+        p2_lde.append(lde_cols)
+        p2_levels.append(levels)
+        tr.absorb(_root(levels))
+        claimed = []
+        for b in t.boundaries:
+            src = w.phase1 if b.group == "p1" else cols
+            claimed.append(int(F.to_u64(GF(src.lo[b.col, b.row],
+                                           src.hi[b.col, b.row]))))
+        claimed = np.array(claimed, dtype=np.uint64)
+        claimed_all.append(claimed)
+        if len(claimed):
+            tr.absorb_u64(claimed)
+
+    # stage 4/5/6 per table: quotient, FRI, openings
+    table_proofs = []
+    for ti, (t, w) in enumerate(zip(tables, witnesses)):
+        lam = int(F.to_u64(tr.challenge(1))[0])
+        N = t.domain
+        log_domain = N.bit_length() - 1
+        pre_lde = t.pre_lde()
+        roll = lambda g, k: GF(jnp.roll(g.lo, -k * t.blowup, axis=-1),
+                               jnp.roll(g.hi, -k * t.blowup, axis=-1))
+        shifts = lambda g: tuple(roll(g, k) for k in (0,) + tuple(t.offsets))
+        xs = F.from_u64(_domain_np(log_domain))
+        zh = F.from_u64(np.tile(_zh_inv_cycle(t.log_n, t.blowup),
+                                N // t.blowup))
+        compose = t.composer()
+        # count constraints once (cheap host eval on 1-point dummy)
+        n_cons = _count_constraints(t)
+        lam_pows = _lam_pows(lam, n_cons + len(t.boundaries))
+        if getattr(t, "_bnd_invs_dom", None) is None:
+            t._bnd_invs_dom = t.boundary_invs(_domain_np(log_domain))
+        q_vals = compose(shifts(pre_lde), shifts(snap_lde[ti]),
+                         shifts(p1_lde[ti]), shifts(p2_lde[ti]),
+                         ch["alpha"], ch["beta"], ch["gamma"],
+                         lam_pows, F.from_u64(claimed_all[ti]), xs, zh,
+                         t._bnd_invs_dom)
+        fri_proof = fri.prove(q_vals, log_domain, ntt.COSET_SHIFT, tr,
+                              n_queries)
+        idxs = fri_proof._indices
+        pos = _positions(np.asarray(idxs), N, t.blowup, tuple(t.offsets))
+        openings = {}
+        for gname, lde_cols, levels in (
+                ("pre", pre_lde, None),
+                ("snap", snap_lde[ti], snap_levels[ti]),
+                ("p1", p1_lde[ti], p1_levels[ti]),
+                ("p2", p2_lde[ti], p2_levels[ti])):
+            if lde_cols.lo.shape[0] == 0:
+                openings[gname] = (pos, np.zeros((len(pos), 0), np.uint64),
+                                   np.zeros((len(pos), 0, 4), np.uint64))
+                continue
+            vals = F.to_u64(_gather_rows(lde_cols, jnp.asarray(pos)))
+            if gname == "pre":
+                paths = np.zeros((len(pos), 0, 4), np.uint64)
+            else:
+                paths = F.to_u64(merkle.open_paths_batch(levels,
+                                                         jnp.asarray(pos)))
+            openings[gname] = (pos, vals, paths)
+        table_proofs.append(TableProof(
+            p1_root=F.to_u64(_root(p1_levels[ti])),
+            p2_root=F.to_u64(_root(p2_levels[ti])),
+            snap_root=(t._snap_cache[3] if t.n_snap else None),
+            claimed=claimed_all[ti], fri_proof=fri_proof,
+            openings=openings))
+    return Proof(tables=table_proofs, n_queries=n_queries)
+
+
+@lru_cache(maxsize=None)
+def _dummy_cache():
+    return {}
+
+
+def _count_constraints(t: AirTable) -> int:
+    cache = _dummy_cache()
+    key = (t.name, t.log_n, t.n_phase1, t.n_phase2)
+    if key in cache:
+        return cache[key]
+    mk = lambda c: GF(jnp.zeros((c, 1), jnp.uint32), jnp.zeros((c, 1), jnp.uint32))
+    one = GF(jnp.ones((1,), jnp.uint32), jnp.zeros((1,), jnp.uint32))
+    sc = GF(one.lo[0], one.hi[0])
+    ch = {"alpha": sc, "beta": sc, "gamma": sc}
+    npre = t.pre.lo.shape[0]
+    offs = (0,) + tuple(t.offsets)
+    mkg = lambda c: {k: mk(c) for k in offs}
+    cons = t.eval_constraints(mkg(npre), mkg(t.n_snap), mkg(t.n_phase1),
+                              mkg(t.n_phase2), ch)
+    cache[key] = len(cons)
+    return len(cons)
+
+
+def verify(tables: List[AirTable], proof: Proof,
+           tr: Transcript) -> Tuple[bool, Dict]:
+    """Returns (ok, info); info carries claimed boundary values + challenges
+    for statement-level checks."""
+    n_queries = proof.n_queries
+    info: Dict = {"claimed": [], "snap_roots": []}
+    for t, tp in zip(tables, proof.tables):
+        if t.n_snap:
+            tr.absorb(F.from_u64(tp.snap_root))
+        info["snap_roots"].append(tp.snap_root)
+    for tp in proof.tables:
+        tr.absorb(F.from_u64(tp.p1_root))
+    chv = tr.challenge(3)
+    ch = {"alpha": _gf_scalar(chv, 0), "beta": _gf_scalar(chv, 1),
+          "gamma": _gf_scalar(chv, 2)}
+    for tp in proof.tables:
+        tr.absorb(F.from_u64(tp.p2_root))
+        if len(tp.claimed):
+            tr.absorb_u64(tp.claimed)
+        info["claimed"].append(tp.claimed)
+    info["challenges"] = ch
+
+    for ti, (t, tp) in enumerate(zip(tables, proof.tables)):
+        lam = int(F.to_u64(tr.challenge(1))[0])
+        N = t.domain
+        log_domain = N.bit_length() - 1
+        pre_lde = t.pre_lde()
+        n_blocks = 1 + len(t.offsets)
+        pos, p1_vals, p1_paths = tp.openings["p1"]
+        pos2, p2_vals, p2_paths = tp.openings["p2"]
+        if not (np.array_equal(pos, pos2)
+                and len(pos) == 2 * n_blocks * n_queries):
+            _dbg("FAIL positions-structure table=" + t.name); return False, info
+        # structural check: offset blocks must match the declared offsets
+        twoQ = 2 * n_queries
+        for bi, k in enumerate(t.offsets):
+            expect = (pos[:twoQ] + k * t.blowup) % N
+            if not np.array_equal(pos[(bi + 1) * twoQ:(bi + 2) * twoQ],
+                                  expect):
+                _dbg("FAIL offset-blocks table=" + t.name); return False, info
+        snap_pos, snap_vals, snap_paths = tp.openings.get(
+            "snap", (pos, np.zeros((len(pos), 0), np.uint64),
+                     np.zeros((len(pos), 0, 4), np.uint64)))
+        if t.n_snap and not np.array_equal(snap_pos, pos):
+            return False, info
+        # verify Merkle openings (batched)
+        for vals, paths, root in ((p1_vals, p1_paths, tp.p1_root),
+                                  (p2_vals, p2_paths, tp.p2_root),
+                                  (snap_vals, snap_paths, tp.snap_root)):
+            if vals.shape[1] == 0:
+                continue
+            leaves = poseidon.hash_elements(F.from_u64(vals))
+            ok = merkle.verify_paths_batch(F.from_u64(root), leaves,
+                                           jnp.asarray(pos),
+                                           F.from_u64(paths))
+            if not bool(jnp.all(ok)):
+                _dbg("FAIL merkle-openings table=" + t.name); return False, info
+        # preprocessed values come from the public layout directly
+        pre_vals = F.to_u64(_gather_rows(pre_lde, jnp.asarray(pos))) \
+            if pre_lde.lo.shape[0] else np.zeros((len(pos), 0), np.uint64)
+
+        # recompute Q at the opened (a, b) positions
+        mkcols = lambda v: F.from_u64(v.T.copy())
+        blocks = lambda vals: tuple(
+            mkcols(vals[bi * twoQ:(bi + 1) * twoQ]) for bi in range(n_blocks))
+        dom = _domain_np(log_domain)
+        xs = F.from_u64(dom[pos[:twoQ]])
+        zh = F.from_u64(_zh_inv_cycle(t.log_n, t.blowup)[pos[:twoQ] % t.blowup])
+        n_cons = _count_constraints(t)
+        lam_pows = _lam_pows(lam, n_cons + len(t.boundaries))
+        q_expect = t.composer()(blocks(pre_vals), blocks(snap_vals),
+                                blocks(p1_vals), blocks(p2_vals),
+                                ch["alpha"], ch["beta"], ch["gamma"],
+                                lam_pows, F.from_u64(tp.claimed), xs, zh,
+                                t.boundary_invs(dom[pos[:twoQ]]))
+        q_u64 = F.to_u64(q_expect)
+        expect_a = {int(p): int(v) for p, v in zip(pos[:n_queries], q_u64[:n_queries])}
+        expect_b = {int(p): int(v) for p, v in
+                    zip(pos[n_queries:twoQ], q_u64[n_queries:twoQ])}
+
+        def first_layer_check(pa, pb):
+            ea = [expect_a.get(int(x), expect_b.get(int(x), -1)) for x in pa]
+            eb = [expect_b.get(int(x), expect_a.get(int(x), -1)) for x in pb]
+            return ea, eb
+
+        if not fri.verify(tp.fri_proof, log_domain, ntt.COSET_SHIFT, tr,
+                          n_queries, first_layer_check):
+            _dbg("FAIL fri table=" + t.name); return False, info
+        # final-degree check
+        d0 = (t.max_degree - 1) * t.n
+        nl_final = len(tp.fri_proof.final_coeffs)
+        allowed = max(1, (nl_final * d0) // N)
+        if np.any(tp.fri_proof.final_coeffs[allowed:] != 0):
+            _dbg("FAIL final-degree table=" + t.name); return False, info
+    return True, info

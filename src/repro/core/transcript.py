@@ -1,0 +1,67 @@
+"""Fiat-Shamir transcript over the Poseidon sponge.
+
+The prover and verifier drive an identical transcript: every commitment
+(Merkle root / digest / public value) is absorbed before the challenge that
+depends on it is squeezed. Challenges are Goldilocks elements (or index
+sets for FRI queries).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import field as F
+from . import poseidon
+from .field import GF
+
+
+class Transcript:
+    def __init__(self, domain_tag: str):
+        tag = np.frombuffer(
+            __import__("hashlib").sha256(domain_tag.encode()).digest()[:32],
+            dtype=np.uint64) % np.uint64(F.P_INT)
+        self._state = F.from_u64(np.concatenate([tag.astype(np.uint64),
+                                                 np.zeros(poseidon.WIDTH - 4,
+                                                          np.uint64)]))
+        self._state = poseidon.permute(self._state)
+        self._counter = 0
+
+    def absorb(self, elems: GF) -> None:
+        """Absorb a flat GF[L] (any shape is flattened)."""
+        flat = F.reshape(elems, (-1,))
+        L = flat.lo.shape[0]
+        rate = poseidon.RATE
+        pad = (-L) % rate
+        if pad:
+            flat = F.concat([flat, F.zeros((pad,))], axis=0)
+        nblocks = flat.lo.shape[0] // rate
+        st = self._state
+        for b in range(nblocks):
+            blk = GF(flat.lo[b * rate:(b + 1) * rate],
+                     flat.hi[b * rate:(b + 1) * rate])
+            # additive absorb into the rate portion
+            mixed = F.add(GF(st.lo[:rate], st.hi[:rate]), blk)
+            st = poseidon.permute(GF(st.lo.at[:rate].set(mixed.lo),
+                                     st.hi.at[:rate].set(mixed.hi)))
+        self._state = st
+
+    def absorb_u64(self, values) -> None:
+        self.absorb(F.from_u64(np.atleast_1d(np.asarray(values, dtype=np.uint64))))
+
+    def challenge(self, n: int = 1) -> GF:
+        """Squeeze n field elements."""
+        outs_lo, outs_hi = [], []
+        got = 0
+        while got < n:
+            take = min(poseidon.RATE, n - got)
+            outs_lo.append(self._state.lo[:take])
+            outs_hi.append(self._state.hi[:take])
+            got += take
+            self._state = poseidon.permute(self._state)
+        import jax.numpy as jnp
+        return GF(jnp.concatenate(outs_lo), jnp.concatenate(outs_hi))
+
+    def challenge_indices(self, n: int, domain_size: int) -> np.ndarray:
+        """n query indices in [0, domain_size) (host ints)."""
+        ch = self.challenge(n)
+        vals = F.to_u64(ch)
+        return (vals % np.uint64(domain_size)).astype(np.int64)

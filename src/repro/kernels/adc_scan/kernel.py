@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: fused IVF-PQ ADC scoring via one-hot MXU matmuls.
+
+The paper avoids random access in circuits; the TPU analogue avoids
+gathers in hardware: PQ codes become one-hot rows contracted against the
+LUT on the MXU (adc[c] = sum_m onehot(codes[c,m]) . LUT[m]), fused with
+validity masking. f32 fast-path for serving; the exact integer path used
+for provable queries lives in core/ivfpq.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_C = 256     # candidates per program
+
+
+def _kernel(codes_ref, lut_ref, flags_ref, out_ref, *, K, d_max):
+    codes = codes_ref[...]                   # [BLOCK_C, M] int32
+    lut = lut_ref[...]                       # [M, K] f32
+    flags = flags_ref[...]                   # [BLOCK_C] int32
+    M = codes.shape[1]
+    onehot = (codes[:, :, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, 1, K), 2))
+    onehot = onehot.astype(jnp.float32).reshape(codes.shape[0], M * K)
+    dists = jnp.dot(onehot, lut.reshape(M * K),
+                    preferred_element_type=jnp.float32)
+    out_ref[...] = jnp.where(flags.astype(bool), dists,
+                             jnp.float32(d_max))
+
+
+@functools.partial(jax.jit, static_argnames=("d_max", "interpret"))
+def adc_scan(codes, lut, flags, d_max: float, interpret: bool = True):
+    """codes [N, M] int32, lut [M, K] f32, flags [N] int32 -> [N] f32."""
+    n, M = codes.shape
+    K = lut.shape[1]
+    assert n % BLOCK_C == 0
+    grid = (n // BLOCK_C,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, K=K, d_max=d_max),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_C, M), lambda i: (i, 0)),
+                  pl.BlockSpec((M, K), lambda i: (0, 0)),
+                  pl.BlockSpec((BLOCK_C,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK_C,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret)(codes, lut, flags)
+    return out

@@ -1,0 +1,14 @@
+import jax.numpy as jnp
+
+from .kernel import BLOCK_C, adc_scan
+
+
+def score(codes, lut, flags, d_max, interpret=True):
+    n = codes.shape[0]
+    pad = (-n) % BLOCK_C
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+        flags = jnp.pad(flags, ((0, pad),))
+    out = adc_scan(codes, lut.astype(jnp.float32), flags, float(d_max),
+                   interpret=interpret)
+    return out[:n]

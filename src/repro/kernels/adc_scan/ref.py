@@ -1,0 +1,10 @@
+"""Pure-jnp oracle: gather-based ADC scoring."""
+import jax.numpy as jnp
+
+
+def adc_scan_ref(codes, lut, flags, d_max):
+    M = codes.shape[1]
+    sel = jnp.take_along_axis(lut[None, :, :].repeat(codes.shape[0], 0),
+                              codes[:, :, None], axis=2)[:, :, 0]
+    dists = sel.sum(-1)
+    return jnp.where(flags.astype(bool), dists, jnp.float32(d_max))

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: blocked Goldilocks grand products.
+
+Per-program: sequential field product over a VMEM block (the multiset /
+permutation-argument accumulators of the proving backend). ops.py chains
+block products into a full prefix scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import field as F
+from repro.core.field import GF
+
+BLOCK = 256
+
+
+def _kernel(lo_ref, hi_ref, olo_ref, ohi_ref):
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    x = GF(lo.reshape(-1, 2).T[0].reshape(-1), 0) if False else GF(lo, hi)
+    # log-depth pairwise tree product over the block
+    n = lo.shape[0]
+    cur = GF(lo, hi)
+    while cur.lo.shape[0] > 1:
+        half = cur.lo.shape[0] // 2
+        a = GF(cur.lo[:half], cur.hi[:half])
+        b = GF(cur.lo[half:2 * half], cur.hi[half:2 * half])
+        cur = F.mul(a, b)
+    olo_ref[0] = cur.lo[0]
+    ohi_ref[0] = cur.hi[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_products(lo, hi, interpret: bool = True):
+    """lo/hi [N] -> per-block products [N/BLOCK]."""
+    n = lo.shape[0]
+    assert n % BLOCK == 0
+    grid = (n // BLOCK,)
+    olo, ohi = pl.pallas_call(
+        _kernel, grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))] * 2,
+        out_specs=[pl.BlockSpec((1,), lambda i: (i,))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((n // BLOCK,), jnp.uint32)] * 2,
+        interpret=interpret)(lo, hi)
+    return olo, ohi

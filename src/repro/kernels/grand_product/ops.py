@@ -1,0 +1,16 @@
+import jax.numpy as jnp
+
+from repro.core import field as F
+from repro.core.field import GF
+from .kernel import BLOCK, block_products
+
+
+def grand_product(lo, hi, interpret=True):
+    """Full product of GF[N] via blocked kernel + tree combine."""
+    n = lo.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        lo = jnp.concatenate([lo, jnp.ones(pad, jnp.uint32)])
+        hi = jnp.concatenate([hi, jnp.zeros(pad, jnp.uint32)])
+    blo, bhi = block_products(lo, hi, interpret=interpret)
+    return F.prod_gf(GF(blo, bhi), axis=0)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: one DIF NTT stage over Goldilocks limb pairs.
+
+Grid tiles (batch x block-pairs); each program loads a [BLOCK_B, 2*half]
+tile into VMEM and applies a_out = a + b, b_out = (a - b) * w with full
+uint32-limb field arithmetic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import field as F
+from repro.core.field import GF
+
+BLOCK_B = 8
+
+
+def _kernel(lo_ref, hi_ref, twlo_ref, twhi_ref, olo_ref, ohi_ref, *, half):
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    a = GF(lo[:, :half], hi[:, :half])
+    b = GF(lo[:, half:], hi[:, half:])
+    tw = GF(twlo_ref[...], twhi_ref[...])
+    s = F.add(a, b)
+    t = F.mul(F.sub(a, b), GF(jnp.broadcast_to(tw.lo, a.lo.shape),
+                              jnp.broadcast_to(tw.hi, a.hi.shape)))
+    olo_ref[...] = jnp.concatenate([s.lo, t.lo], axis=1)
+    ohi_ref[...] = jnp.concatenate([s.hi, t.hi], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("half", "interpret"))
+def ntt_stage(lo, hi, tw_lo, tw_hi, half: int, interpret: bool = True):
+    """One stage: lo/hi [B, nblocks*2*half]; twiddles [half]."""
+    B, n = lo.shape
+    nblocks = n // (2 * half)
+    grid = (max(B // BLOCK_B, 1), nblocks)
+    bb = min(BLOCK_B, B)
+    spec = pl.BlockSpec((bb, 2 * half), lambda i, j: (i, j))
+    tw_spec = pl.BlockSpec((half,), lambda i, j: (0,))
+    olo, ohi = pl.pallas_call(
+        functools.partial(_kernel, half=half), grid=grid,
+        in_specs=[spec, spec, tw_spec, tw_spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((B, n), jnp.uint32)] * 2,
+        interpret=interpret)(lo, hi, tw_lo, tw_hi)
+    return olo, ohi

@@ -1,0 +1,1 @@
+from .kernel import ntt_stage  # jit'd public entry point

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: core.ntt's stage math."""
+import jax.numpy as jnp
+
+from repro.core import field as F
+from repro.core.field import GF
+
+
+def ntt_stage_ref(lo, hi, tw_lo, tw_hi, half):
+    B, n = lo.shape
+    nblocks = n // (2 * half)
+    x = GF(lo.reshape(B, nblocks, 2 * half), hi.reshape(B, nblocks, 2 * half))
+    a = GF(x.lo[..., :half], x.hi[..., :half])
+    b = GF(x.lo[..., half:], x.hi[..., half:])
+    tw = GF(tw_lo, tw_hi)
+    s = F.add(a, b)
+    t = F.mul(F.sub(a, b), tw)
+    out = GF(jnp.concatenate([s.lo, t.lo], -1),
+             jnp.concatenate([s.hi, t.hi], -1))
+    return out.lo.reshape(B, n), out.hi.reshape(B, n)

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: batched Poseidon permutation over Goldilocks.
+
+Field elements are uint32 limb pairs (TPU vector units have no 64-bit int
+multiply — see core/field.py). The batch is tiled over the grid; each
+program permutes a BLOCK x 12 tile held in VMEM. Round constants and the
+MDS coefficient matrix enter as operands (Pallas kernels may not capture
+array constants); the round loop is fully unrolled straight-line code.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import field as F
+from repro.core import poseidon as pref
+from repro.core.field import GF
+
+BLOCK = 128
+
+
+def _mds(st: GF, coef):
+    """coef [12, 12] uint32 ref value; out[r] = sum_i coef[r,i]*s[(i+r)%12]."""
+    outs_lo, outs_hi = [], []
+    for r in range(12):
+        rolled_lo = jnp.roll(st.lo, -r, axis=1)
+        rolled_hi = jnp.roll(st.hi, -r, axis=1)
+        acc = (jnp.zeros_like(st.lo[:, 0]),) * 3
+        for i in range(12):
+            c = coef[r, i]
+            l0, l1 = F._mul32(c, rolled_lo[:, i])
+            h0, h1 = F._mul32(c, rolled_hi[:, i])
+            m1 = l1 + h0
+            mc = (m1 < l1).astype(jnp.uint32)
+            acc = pref._add96(acc, (l0, m1, h1 + mc))
+        o = pref._reduce96(*acc)
+        outs_lo.append(o.lo)
+        outs_hi.append(o.hi)
+    return GF(jnp.stack(outs_lo, axis=1), jnp.stack(outs_hi, axis=1))
+
+
+def _kernel(lo_ref, hi_ref, rclo_ref, rchi_ref, coef_ref,
+            out_lo_ref, out_hi_ref):
+    st = GF(lo_ref[...], hi_ref[...])
+    rclo = rclo_ref[...]
+    rchi = rchi_ref[...]
+    coef = coef_ref[...]
+    half = pref.FULL_ROUNDS // 2
+    for r in range(pref.N_ROUNDS):
+        rc = GF(jnp.broadcast_to(rclo[r], st.lo.shape),
+                jnp.broadcast_to(rchi[r], st.hi.shape))
+        st = F.add(st, rc)
+        if half <= r < half + pref.PARTIAL_ROUNDS:
+            lane0 = GF(st.lo[:, 0], st.hi[:, 0])
+            s0 = F.pow7(lane0)
+            st = GF(st.lo.at[:, 0].set(s0.lo), st.hi.at[:, 0].set(s0.hi))
+        else:
+            st = F.pow7(st)
+        st = _mds(st, coef)
+    out_lo_ref[...] = st.lo
+    out_hi_ref[...] = st.hi
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def poseidon_permute(lo, hi, interpret: bool = True):
+    """lo/hi: [N, 12] uint32, N % BLOCK == 0."""
+    n = lo.shape[0]
+    assert n % BLOCK == 0
+    grid = (n // BLOCK,)
+    spec = pl.BlockSpec((BLOCK, 12), lambda i: (i, 0))
+    rc_spec = pl.BlockSpec((pref.N_ROUNDS, 12), lambda i: (0, 0))
+    coef_spec = pl.BlockSpec((12, 12), lambda i: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((n, 12), jnp.uint32)] * 2
+    rclo = jnp.asarray(pref._RC_LO)
+    rchi = jnp.asarray(pref._RC_HI)
+    coef = jnp.asarray(pref._COEF)
+    olo, ohi = pl.pallas_call(
+        _kernel, grid=grid,
+        in_specs=[spec, spec, rc_spec, rc_spec, coef_spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape, interpret=interpret)(lo, hi, rclo, rchi, coef)
+    return olo, ohi

@@ -1,0 +1,16 @@
+"""jit'd public wrapper: pads the batch to the block size and dispatches
+to the Pallas kernel (interpret=True on CPU; compiled on TPU)."""
+import jax
+import jax.numpy as jnp
+
+from .kernel import BLOCK, poseidon_permute
+
+
+def permute(lo, hi, interpret: bool = True):
+    n = lo.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        lo = jnp.pad(lo, ((0, pad), (0, 0)))
+        hi = jnp.pad(hi, ((0, pad), (0, 0)))
+    olo, ohi = poseidon_permute(lo, hi, interpret=interpret)
+    return olo[:n], ohi[:n]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the poseidon kernel."""
+from repro.core import poseidon
+from repro.core.field import GF
+
+
+def poseidon_permute_ref(lo, hi):
+    out = poseidon.permute(GF(lo, hi))
+    return out.lo, out.hi

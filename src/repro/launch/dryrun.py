@@ -1,0 +1,298 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * jit(step).lower(**input_specs).compile() must succeed,
+  * memory_analysis() bounds bytes per device,
+  * cost_analysis() + HLO collective parse feed the roofline (benchmarks/
+    roofline.py and EXPERIMENTS.md §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+      --shape train_4k [--multi-pod] [--json out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, list_archs
+from repro.configs.common import SHAPES
+from repro.launch import mesh as mesh_lib
+from repro.models import encdec, lm, steps
+from repro.optim import adamw
+from repro.parallel.sharding import ShardingRules, set_rules
+
+
+# ---------------------------------------------------------------------------
+# collective-byte extraction from compiled/optimized HLO
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # ops look like:  %x = bf16[256,4096]{...} all-gather(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^ ]+)\s+([a-z\-]+)", s)
+        if not m:
+            continue
+        op = m.group(2)
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                out[c] += _shape_bytes(m.group(1))
+                out["count"] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_name: str, multi_pod: bool):
+    """Returns (fn, arg_specs, in_shardings) ready to lower."""
+    spec = get_arch(arch_id)
+    if not spec.supports(shape_name):
+        return None
+    shp = SHAPES[shape_name]
+    m = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(m)
+    set_rules(rules)
+
+    sd = jax.ShapeDtypeStruct
+    batch_specs = spec.input_specs(shape_name)
+
+    if spec.kind == "encdec":
+        params_shapes = jax.eval_shape(
+            lambda: encdec.init_params(spec.model, jax.random.key(0)))
+    else:
+        params_shapes = jax.eval_shape(
+            lambda: lm.init_params(spec.model, jax.random.key(0)))
+
+    def param_sharding(path, leaf):
+        """2D sharding with structure-aware rules (§Perf hillclimb):
+
+        * MoE expert tensors [E, ., .]: experts -> model (EP), dim1 ->
+          data (FSDP). The generic heuristic used to shard d_model on
+          'model', which FSDP-gathered every expert every step (tera-byte
+          all-gathers on qwen3-moe).
+        * Generic weights [d_in, ...]: never put 'model' on the
+          contraction dim 0 (it turns every matmul into partial sums +
+          seq-length all-reduces — the minicpm3 MLA pathology); instead
+          'model' goes to the largest output dim, 'data' (FSDP) to dim 0.
+        """
+        shape = leaf.shape
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        if len(shape) == 0:
+            return rules.sharding((), ())
+        # scan-over-layers stacks block weights with a leading repeat dim:
+        # strip it for the structural rules (the v2 hillclimb failure —
+        # 4D stacked leaves fell through to the generic rule, which put
+        # 'model' back on contraction dims).
+        stacked = "blocks" in keys and len(shape) >= 2
+        inner = shape[1:] if stacked else shape
+        prefix = [None] if stacked else []
+        if len(inner) == 3 and "moe" in keys and inner[0] >= 4:
+            logical = prefix + ["expert", "embed", None]
+            return rules.sharding(tuple(logical), shape)
+        if len(inner) == 0:
+            return rules.sharding(tuple(prefix or ()), shape)
+        if len(inner) == 1:
+            return rules.sharding(tuple(prefix + ["embed"]), shape)
+        if len(inner) == 3:
+            # [d_in, heads, head_dim]: shard heads on 'model'; head_dim is
+            # a contraction dim of the attention einsums (sharding it
+            # makes partial-sum all-reduces of seq-length intermediates).
+            return rules.sharding(tuple(prefix + ["embed", "mlp", None]),
+                                  shape)
+        out_dims = list(range(1, len(inner)))
+        biggest_out = max(out_dims, key=lambda i: inner[i])
+        logical = [None] * len(inner)
+        logical[biggest_out] = "mlp"     # -> model axis
+        logical[0] = "embed"             # -> data axis (FSDP)
+        return rules.sharding(tuple(prefix + logical), shape)
+
+    params_sh = jax.tree_util.tree_map_with_path(param_sharding, params_shapes)
+
+    if shp["kind"] == "train":
+        opt_cfg = adamw.AdamWCfg(
+            quantized=spec.family in ("moe",) or arch_id in
+            ("qwen1.5-110b", "llava-next-34b"))
+        opt_shapes = jax.eval_shape(
+            lambda p: adamw.init_state(p, opt_cfg), params_shapes)
+
+        def opt_sharding(leaf):
+            if leaf.ndim == 0:
+                return rules.sharding((), ())
+            order = np.argsort(leaf.shape)[::-1]
+            logical = [None] * leaf.ndim
+            logical[order[0]] = "mlp"
+            if leaf.ndim > 1 and leaf.shape[order[1]] > 1:
+                logical[order[1]] = "embed"
+            return rules.sharding(tuple(logical), leaf.shape)
+
+        opt_sh = jax.tree.map(opt_sharding, opt_shapes)
+        step_fn = steps.make_train_step(spec, opt_cfg)
+
+        def batch_sharding(leaf):
+            logical = ["batch"] + [None] * (leaf.ndim - 1)
+            return rules.sharding(tuple(logical), leaf.shape)
+
+        batch_sh = jax.tree.map(batch_sharding, batch_specs)
+        fn = jax.jit(step_fn,
+                     in_shardings=(params_sh, opt_sh, batch_sh),
+                     donate_argnums=(0, 1))
+        args = (params_shapes, opt_shapes, batch_specs)
+        return spec, m, fn, args
+
+    if shp["kind"] == "prefill":
+        step_fn = steps.make_prefill_step(spec, cache_len=shp["seq"])
+
+        def batch_sharding(leaf):
+            logical = ["batch"] + [None] * (leaf.ndim - 1)
+            return rules.sharding(tuple(logical), leaf.shape)
+
+        batch_sh = jax.tree.map(batch_sharding, batch_specs)
+        fn = jax.jit(step_fn, in_shardings=(params_sh, batch_sh))
+        args = (params_shapes, batch_specs)
+        return spec, m, fn, args
+
+    # decode
+    cache_len = spec.cache_len(shape_name)
+    step_fn = steps.make_decode_step(spec)
+    caches_shapes = jax.eval_shape(
+        lambda: steps.init_decode_caches(spec, shp["batch"], cache_len))
+
+    def cache_sharding(leaf):
+        # [R, B, T, ...] KV caches: batch -> data, seq -> model
+        logical = [None] * leaf.ndim
+        if leaf.ndim >= 3:
+            logical[1] = "batch"
+            if leaf.shape[2] > 1024:
+                logical[2] = "kv_seq"
+        elif leaf.ndim >= 2:
+            logical[1] = "batch"
+        return rules.sharding(tuple(logical), leaf.shape)
+
+    caches_sh = jax.tree.map(cache_sharding, caches_shapes)
+
+    def batch_sharding(leaf):
+        if leaf.ndim == 0:
+            return rules.sharding((), ())
+        logical = ["batch"] + [None] * (leaf.ndim - 1)
+        return rules.sharding(tuple(logical), leaf.shape)
+
+    batch_sh = jax.tree.map(batch_sharding, batch_specs)
+    fn = jax.jit(step_fn, in_shardings=(params_sh, batch_sh, caches_sh),
+                 donate_argnums=(2,))
+    args = (params_shapes, batch_specs, caches_shapes)
+    return spec, m, fn, args
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool) -> Dict:
+    t0 = time.time()
+    built = build_cell(arch_id, shape_name, multi_pod)
+    if built is None:
+        return {"arch": arch_id, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped (full attention at 500k; see DESIGN.md)"}
+    spec, m, fn, args = built
+    with m:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_dev = int(np.prod(m.devices.shape))
+    result = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "devices": n_dev,
+        "compile_s": round(time.time() - t0, 1),
+        "flops": float(cost.get("flops", -1)) if cost else -1.0,
+        "bytes_accessed": float(cost.get("bytes accessed", -1)) if cost else -1.0,
+        "collective_bytes": {k: int(v) for k, v in coll.items()},
+        "argument_size_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_size_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_size_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "peak_bytes_per_device": int(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)) // max(n_dev, 1),
+    }
+    set_rules(None)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for a, s in cells:
+        try:
+            r = run_cell(a, s, args.multi_pod)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            r = {"arch": a, "shape": s,
+                 "mesh": "2x16x16" if args.multi_pod else "16x16",
+                 "status": f"FAILED: {type(e).__name__}: {e}"}
+        results.append(r)
+        print(json.dumps(r), flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    bad = [r for r in results if r["status"].startswith("FAILED")]
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

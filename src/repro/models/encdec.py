@@ -1,0 +1,151 @@
+"""Encoder-decoder transformer (SeamlessM4T-v2 backbone shape).
+
+Encoder consumes precomputed modality frame embeddings (the audio frontend
+is a stub per the task spec); decoder is a causal LM with cross-attention
+into the encoder memory. Both stacks scan over layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from . import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecCfg:
+    name: str
+    d_model: int
+    enc_layers: int
+    dec_layers: int
+    vocab: int
+    d_ff: int
+    attn: L.AttnCfg = None
+    norm_eps: float = 1e-6
+    remat: bool = True
+    dtype: Any = jnp.bfloat16
+
+
+def _enc_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"norm1": L.rmsnorm_init(cfg.d_model, dtype),
+            "attn": L.attn_init(ks[0], cfg.attn, dtype),
+            "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": L.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _dec_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {"norm1": L.rmsnorm_init(cfg.d_model, dtype),
+            "self_attn": L.attn_init(ks[0], cfg.attn, dtype),
+            "norm_x": L.rmsnorm_init(cfg.d_model, dtype),
+            "cross_attn": L.attn_init(ks[1], cfg.attn, dtype),
+            "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": L.swiglu_init(ks[2], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def init_params(cfg: EncDecCfg, key):
+    ks = jax.random.split(key, cfg.enc_layers + cfg.dec_layers + 3)
+    enc = [_enc_block_init(ks[i], cfg, cfg.dtype)
+           for i in range(cfg.enc_layers)]
+    dec = [_dec_block_init(ks[cfg.enc_layers + i], cfg, cfg.dtype)
+           for i in range(cfg.dec_layers)]
+    s = 1.0 / math.sqrt(cfg.d_model)
+    return {
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "embed": (jax.random.normal(ks[-1], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * s).astype(cfg.dtype),
+        "unembed": (jax.random.normal(ks[-2], (cfg.d_model, cfg.vocab),
+                                      jnp.float32) * s).astype(cfg.dtype),
+        "enc_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "dec_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+
+
+def encode(params, cfg: EncDecCfg, frames):
+    """frames [B, S_enc, D] (precomputed stub embeddings) -> memory."""
+    x = constrain(frames.astype(cfg.dtype), "batch", None, None)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    acfg = dataclasses.replace(cfg.attn, causal=False)
+
+    def body(x, p):
+        def blk(x_):
+            h, _ = L.attn_fwd(p["attn"], acfg, L.rmsnorm(p["norm1"], x_),
+                              positions)
+            x_ = x_ + h
+            x_ = x_ + L.swiglu_fwd(p["mlp"], L.rmsnorm(p["norm2"], x_))
+            return x_
+        if cfg.remat:
+            blk = jax.checkpoint(blk)
+        return blk(x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block(p, cfg, x, positions, memory, kv_cache=None, cache_pos=None):
+    h, new_kv = L.attn_fwd(p["self_attn"], cfg.attn,
+                           L.rmsnorm(p["norm1"], x), positions,
+                           kv_cache=kv_cache, cache_pos=cache_pos)
+    x = x + h
+    h, _ = L.attn_fwd(p["cross_attn"], cfg.attn,
+                      L.rmsnorm(p["norm_x"], x), positions, memory=memory)
+    x = x + h
+    x = x + L.swiglu_fwd(p["mlp"], L.rmsnorm(p["norm2"], x))
+    return x, new_kv
+
+
+def decode_train(params, cfg: EncDecCfg, tokens, memory):
+    """Teacher-forced decoder pass; returns logits [B, S_dec, V]."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, p):
+        def blk(x_):
+            return _dec_block(p, cfg, x_, positions, memory)[0]
+        if cfg.remat:
+            blk = jax.checkpoint(blk)
+        return blk(x), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    return L.dense(x, params["unembed"])
+
+
+def loss_fn(params, cfg: EncDecCfg, frames, tokens, targets, mask):
+    memory = encode(params, cfg, frames)
+    logits = decode_train(params, cfg, tokens, memory).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    m = mask.astype(jnp.float32)
+    return -(ll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def init_caches(cfg: EncDecCfg, batch: int, max_len: int):
+    c = L.attn_cache_init(cfg.attn, batch, max_len, cfg.dtype)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.dec_layers,) + x.shape), c)
+
+
+def decode_step(params, cfg: EncDecCfg, token, caches, pos, memory):
+    x = jnp.take(params["embed"], token, axis=0)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None].astype(jnp.int32), (B, 1))
+
+    def body(x, xs):
+        p, cache = xs
+        x, new_kv = _dec_block(p, cfg, x, positions, memory,
+                               kv_cache=cache, cache_pos=pos)
+        return x, new_kv
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], caches))
+    x = L.rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    return L.dense(x, params["unembed"]), new_caches

@@ -1,0 +1,697 @@
+"""Model building blocks: norms, RoPE, GQA/MLA attention, SwiGLU, MoE,
+Mamba2 SSD, hybrid (Hymba) mixers.
+
+Pure-functional: ``init_*`` return param pytrees (dict leaves), ``*_fwd``
+apply them. All matmuls go through ``dense`` so dtype/precision policy and
+sharding constraints live in one place. KV caches are explicit pytrees so
+decode steps stay functional.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+def dense_init(key, in_dim, out_shape, dtype, scale=None):
+    """Weight [in_dim, *out_shape] with fan-in init."""
+    shape = (in_dim,) + tuple(out_shape)
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense(x, w, bias=None):
+    """x [..., d_in] @ w [d_in, *out] -> [..., *out]."""
+    out_dims = w.ndim - 1
+    y = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim, dtype):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta=10000.0, scaling=1.0):
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    return jnp.asarray(inv / scaling, jnp.float32)
+
+
+def apply_rope(x, positions, inv_freqs):
+    """x [..., S, H, hd], positions [..., S] int32."""
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv_freqs
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window / cross / bias / bidirectional)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    window: int = -1           # -1 = full attention
+
+
+def attn_init(key, cfg: AttnCfg, dtype):
+    ks = _split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, (cfg.n_heads, cfg.head_dim), dtype),
+        "wk": dense_init(ks[1], cfg.d_model, (cfg.n_kv, cfg.head_dim), dtype),
+        "wv": dense_init(ks[2], cfg.d_model, (cfg.n_kv, cfg.head_dim), dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.head_dim, (cfg.d_model,),
+                         dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, cfg.head_dim), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv, cfg.head_dim), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv, cfg.head_dim), dtype)
+    return p
+
+
+def _attend(q, k, v, mask, scale):
+    """q [B,S,H,hd], k/v [B,T,Hkv,hd] -> [B,S,H,hd] (fp32 softmax)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qg = q.reshape(B, S, Hkv, group, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, v.shape[-1]).astype(q.dtype)
+
+
+# Chunked (flash-style) attention — §Perf hillclimb: never materializes the
+# [S, T] score matrix; online max/denominator over KV chunks. Cuts the
+# memory roofline term of 32k prefill and 32k-500k decode by ~the S*T/S
+# buffer ratio, at identical math (fp32 accumulation).
+
+ATTN_KV_CHUNK = 1024
+ATTN_Q_CHUNK = 512
+CHUNKED_THRESHOLD = 8192     # use chunked path when T exceeds this
+
+
+def _chunked_enabled() -> bool:
+    import os
+    return os.environ.get("REPRO_CHUNKED_ATTN", "1") != "0"
+
+
+def _attend_chunked(q, k, v, scale, q_pos, kv_valid, window):
+    """q [B,S,H,hd]; k/v [B,T,Hkv,hd]; kv_valid [B,T] bool; causal via
+    positions. Scans KV chunks with running (m, l, o)."""
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    C = min(ATTN_KV_CHUNK, T)
+    n_chunks = T // C
+    qg = (q.astype(jnp.float32) * scale).reshape(B, S, Hkv, group, hd)
+    w = jnp.asarray(window, jnp.int32)
+
+    def body(carry, ci):
+        m, l, o = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, ci * C, C, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, ci * C, C, axis=1)
+        valid = jax.lax.dynamic_slice_in_dim(kv_valid, ci * C, C, axis=1)
+        kv_p = ci * C + jnp.arange(C, dtype=jnp.int32)
+        s = jnp.einsum("bskgh,btkh->bkgst", qg, ks.astype(jnp.float32))
+        ok = valid[:, None, None, None, :]
+        ok = ok & (q_pos[:, None, None, :, None] >= kv_p[None, None, None,
+                                                         None, :])
+        ok = ok & ((q_pos[:, None, None, :, None] - kv_p < w) | (w <= 0))
+        s = jnp.where(ok, s, jnp.float32(-1e30))
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p, vs.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    vd = v.shape[-1]
+    m0 = jnp.full((B, Hkv, group, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, S), jnp.float32)
+    o0 = jnp.zeros((B, Hkv, group, S, vd), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0),
+                                jnp.arange(n_chunks, dtype=jnp.int32))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, vd)
+    return out.astype(q.dtype)
+
+
+def _attend_decode_seqsharded(q, k, v, scale, q_pos, window):
+    """Distributed flash-decode (§Perf hillclimb cell 3): KV cache stays
+    sequence-sharded on 'model'; each shard computes a local partial
+    softmax (m, l, o) over its KV slice and the result combines with a
+    max/psum LSE reduction — no KV all-gather, no [B,H,1,T] f32 buffer.
+
+    q [B,S,H,hd] replicated over 'model'; k/v [B,T,Hkv,hd] with T sharded.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as Pspec
+    from repro.parallel.sharding import get_rules
+
+    rules = get_rules()
+    mesh = rules.mesh
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    batch_ax = rules._mesh_axes("batch", B)
+
+    def local(qs, ks, vs, pos):
+        T_loc = ks.shape[1]
+        shard = jax.lax.axis_index("model")
+        base = shard * T_loc
+        kv_p = base + jnp.arange(T_loc, dtype=jnp.int32)
+        qg = (qs.astype(jnp.float32) * scale).reshape(B_loc(qs), S, Hkv,
+                                                      group, hd)
+        s = jnp.einsum("bskgh,btkh->bkgst", qg, ks.astype(jnp.float32))
+        w = jnp.asarray(window, jnp.int32)
+        ok = (pos[:, None, None, :, None] >= kv_p[None, None, None, None, :])
+        ok &= (pos[:, None, None, :, None] - kv_p < w) | (w <= 0)
+        s = jnp.where(ok, s, jnp.float32(-1e30))
+        m = s.max(axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = p.sum(axis=-1)
+        o = jnp.einsum("bkgst,btkh->bkgsh", p, vs.astype(jnp.float32))
+        m_g = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, "model")
+        o_g = jax.lax.psum(o * corr[..., None], "model")
+        out = o_g / jnp.maximum(l_g[..., None], 1e-30)
+        return jnp.moveaxis(out, 3, 1).reshape(B_loc(qs), S, H,
+                                               vs.shape[-1])
+
+    def B_loc(x):
+        return x.shape[0]
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(Pspec(batch_ax, None, None, None),
+                  Pspec(batch_ax, "model", None, None),
+                  Pspec(batch_ax, "model", None, None),
+                  Pspec(batch_ax, None)),
+        out_specs=Pspec(batch_ax, None, None, None),
+        check_rep=False)
+    return fn(q, k, v, q_pos).astype(q.dtype)
+
+
+def _attend_chunked_q(q, k, v, scale, q_pos, kv_valid, window):
+    """Adds q-chunking on top of KV chunking (32k x 32k prefill)."""
+    B, S, H, hd = q.shape
+    QC = min(ATTN_Q_CHUNK, S)
+    nq = S // QC
+    if nq <= 1:
+        return _attend_chunked(q, k, v, scale, q_pos, kv_valid, window)
+
+    def one(ci):
+        qs = jax.lax.dynamic_slice_in_dim(q, ci * QC, QC, axis=1)
+        ps = jax.lax.dynamic_slice_in_dim(q_pos, ci * QC, QC, axis=1)
+        return _attend_chunked(qs, k, v, scale, ps, kv_valid, window)
+
+    outs = jax.lax.map(one, jnp.arange(nq, dtype=jnp.int32))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, v.shape[-1])
+
+
+def _make_mask(q_pos, kv_pos, causal, window):
+    """[1,1,1,S,T] boolean mask; ``window`` may be a traced int32 scalar
+    (<= 0 means full attention)."""
+    m = jnp.ones((q_pos.shape[-1], kv_pos.shape[-1]), bool)
+    if causal:
+        m &= q_pos[:, None] >= kv_pos[None, :]
+    w = jnp.asarray(window, jnp.int32)
+    m &= (q_pos[:, None] - kv_pos[None, :] < w) | (w <= 0)
+    return m[None, None, None, :, :]
+
+
+def attn_fwd(params, cfg: AttnCfg, x, positions,
+             kv_cache: Optional[dict] = None,
+             cache_pos: Optional[jax.Array] = None,
+             memory: Optional[jax.Array] = None,
+             window=None):
+    """Self- or cross-attention.
+
+    modes:
+      prefill: kv_cache None, full x [B,S,D] -> (out, new_cache)
+      decode:  kv_cache given + cache_pos scalar -> one-token step
+      cross:   memory [B,T,D] given -> keys/values from memory, no cache
+    ``window`` (traced int32 ok) overrides cfg.window; <=0 = full.
+    """
+    B, S, D = x.shape
+    window = cfg.window if window is None else window
+    inv = rope_freqs(cfg.head_dim, cfg.rope_theta)
+    q = dense(x, params["wq"], params.get("bq"))
+    src = memory if memory is not None else x
+    k = dense(src, params["wk"], params.get("bk"))
+    v = dense(src, params["wv"], params.get("bv"))
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+
+    if memory is None:
+        q = apply_rope(q, positions, inv)
+        k = apply_rope(k, positions, inv)
+
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    use_chunked = _chunked_enabled()
+    if kv_cache is None and memory is None:
+        if use_chunked and S >= CHUNKED_THRESHOLD and cfg.causal \
+                and S % ATTN_Q_CHUNK == 0:
+            kv_valid = jnp.ones((B, S), bool)
+            out = _attend_chunked_q(q, k, v, scale, positions, kv_valid,
+                                    window)
+        else:
+            mask = _make_mask(positions[0], positions[0], cfg.causal, window)
+            out = _attend(q, k, v, mask, scale)
+        cache = {"k": k, "v": v, "pos": positions}
+    elif memory is not None:
+        out = _attend(q, k, v, None, scale)
+        cache = None
+    else:
+        # decode: write this step's k/v at cache_pos, attend over cache
+        ck = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, cache_pos,
+                                                 axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v, cache_pos,
+                                                 axis=1)
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
+        T = ck.shape[1]
+        from repro.parallel.sharding import get_rules
+        rules = get_rules()
+        seq_sharded = (rules is not None
+                       and rules._mesh_axes("kv_seq", T) is not None
+                       and "model" in rules.axis_sizes
+                       and T % rules.axis_sizes["model"] == 0)
+        if use_chunked and seq_sharded and T >= CHUNKED_THRESHOLD:
+            out = _attend_decode_seqsharded(q, ck, cv, scale, positions,
+                                            window)
+        elif use_chunked and T >= CHUNKED_THRESHOLD \
+                and T % ATTN_KV_CHUNK == 0:
+            kv_valid = jnp.ones((B, T), bool)      # causal masking suffices
+            out = _attend_chunked(q, ck, cv, scale, positions, kv_valid,
+                                  window)
+        else:
+            kv_pos = jnp.arange(T, dtype=jnp.int32)
+            valid = kv_pos[None, :] <= positions[:, -1:]         # [B,T]
+            w = jnp.asarray(window, jnp.int32)
+            valid &= (positions[:, -1:] - kv_pos[None, :] < w) | (w <= 0)
+            mask = valid[:, None, None, None, :]
+            out = _attend(q, ck, cv, mask, scale)
+        cache = {"k": ck, "v": cv, "pos": kv_cache["pos"]}
+    y = dense(out.reshape(B, S, cfg.n_heads * cfg.head_dim), params["wo"])
+    return constrain(y, "batch", None, None), cache
+
+
+def attn_cache_init(cfg: AttnCfg, batch, max_len, dtype):
+    return {"k": jnp.zeros((batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+            "pos": jnp.zeros((batch, max_len), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3/DeepSeek style)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    d_model: int
+    n_heads: int
+    q_lora: int = 768
+    kv_lora: int = 256
+    qk_nope: int = 64
+    qk_rope: int = 32
+    v_dim: int = 64
+    rope_theta: float = 10000.0
+
+
+def mla_init(key, cfg: MLACfg, dtype):
+    ks = _split(key, 7)
+    H = cfg.n_heads
+    return {
+        "wdq": dense_init(ks[0], cfg.d_model, (cfg.q_lora,), dtype),
+        "q_norm": rmsnorm_init(cfg.q_lora, dtype),
+        "wuq": dense_init(ks[1], cfg.q_lora,
+                          (H, cfg.qk_nope + cfg.qk_rope), dtype),
+        "wdkv": dense_init(ks[2], cfg.d_model,
+                           (cfg.kv_lora + cfg.qk_rope,), dtype),
+        "kv_norm": rmsnorm_init(cfg.kv_lora, dtype),
+        "wuk": dense_init(ks[3], cfg.kv_lora, (H, cfg.qk_nope), dtype),
+        "wuv": dense_init(ks[4], cfg.kv_lora, (H, cfg.v_dim), dtype),
+        "wo": dense_init(ks[5], H * cfg.v_dim, (cfg.d_model,), dtype),
+    }
+
+
+def mla_fwd(params, cfg: MLACfg, x, positions, kv_cache=None, cache_pos=None):
+    """Latent-KV attention; the cache holds (latent, k_rope) only."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    q = dense(rmsnorm(params["q_norm"], dense(x, params["wdq"])),
+              params["wuq"])                         # [B,S,H,nope+rope]
+    q_nope, q_rope = q[..., :cfg.qk_nope], q[..., cfg.qk_nope:]
+    inv = rope_freqs(cfg.qk_rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, positions, inv)
+
+    ckv = dense(x, params["wdkv"])                   # [B,S,kv_lora+rope]
+    latent = rmsnorm(params["kv_norm"], ckv[..., :cfg.kv_lora])
+    k_rope = apply_rope(ckv[..., None, cfg.kv_lora:], positions, inv)  # [B,S,1,rope]
+
+    if kv_cache is not None:
+        latent = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["latent"], latent, cache_pos, axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k_rope"], k_rope, cache_pos, axis=1)
+    T = latent.shape[1]
+    k_nope = dense(latent, params["wuk"])            # [B,T,H,nope]
+    v = dense(latent, params["wuv"])                 # [B,T,H,v]
+    scale = 1.0 / math.sqrt(cfg.qk_nope + cfg.qk_rope)
+    # uniform (q_eff, k_eff) so MLA shares the chunked/flash paths — the
+    # naive [B,H,S,T] f32 logits at 32k are petabyte-scale and force XLA
+    # into partial-sum shardings (EXPERIMENTS.md §Perf cell 1).
+    q_eff = jnp.concatenate([q_nope, q_rope], axis=-1)       # [B,S,H,n+r]
+    k_eff = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, T, 1, cfg.qk_rope)).astype(
+            k_nope.dtype).repeat(H, axis=2)], axis=-1)       # [B,T,H,n+r]
+    if _chunked_enabled() and T >= CHUNKED_THRESHOLD \
+            and S % ATTN_Q_CHUNK == 0 and T % ATTN_KV_CHUNK == 0:
+        kv_valid = jnp.ones((B, T), bool)
+        out = _attend_chunked_q(q_eff, k_eff, v, scale, positions, kv_valid,
+                                jnp.int32(-1))
+    else:
+        if kv_cache is not None:
+            kv_pos = jnp.arange(T, dtype=jnp.int32)
+            mask = (kv_pos[None, :] <= positions[:, -1:])[:, None, None,
+                                                          None, :]
+        else:
+            mask = (positions[0][:, None] >=
+                    positions[0][None, :])[None, None, None, :, :]
+        out = _attend(q_eff, k_eff, v, mask, scale)
+    y = dense(out.reshape(B, S, H * cfg.v_dim).astype(x.dtype), params["wo"])
+    cache = {"latent": latent, "k_rope": k_rope}
+    return constrain(y, "batch", None, None), cache
+
+
+def mla_cache_init(cfg: MLACfg, batch, max_len, dtype):
+    return {"latent": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+            "k_rope": jnp.zeros((batch, max_len, 1, cfg.qk_rope), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model, d_ff, dtype):
+    ks = _split(key, 3)
+    return {"wi": dense_init(ks[0], d_model, (d_ff,), dtype),
+            "wg": dense_init(ks[1], d_model, (d_ff,), dtype),
+            "wo": dense_init(ks[2], d_ff, (d_model,), dtype)}
+
+
+def swiglu_fwd(params, x):
+    h = jax.nn.silu(dense(x, params["wg"]).astype(jnp.float32)).astype(x.dtype)
+    h = h * dense(x, params["wi"])
+    h = constrain(h, "batch", None, "mlp")
+    return constrain(dense(h, params["wo"]), "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, capacity-bounded scatter dispatch, EP over 'model')
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+def moe_init(key, cfg: MoECfg, dtype):
+    ks = _split(key, 4)
+    E, D, Fd = cfg.n_experts, cfg.d_model, cfg.d_ff
+    s = 1.0 / math.sqrt(D)
+    return {
+        "router": dense_init(ks[0], D, (E,), jnp.float32),
+        "wi": (jax.random.normal(ks[1], (E, D, Fd), jnp.float32) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (E, D, Fd), jnp.float32) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (E, Fd, D), jnp.float32)
+               / math.sqrt(Fd)).astype(dtype),
+    }
+
+
+def moe_fwd(params, cfg: MoECfg, x):
+    """x [B,S,D]. Scatter tokens into per-expert capacity buffers, run the
+    expert FFNs (experts sharded over 'model'), gather back. Overflowing
+    tokens are dropped (capacity_factor bounds the buffers)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = dense(xt, params["router"].astype(xt.dtype)).astype(jnp.float32)
+    weights, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), K)   # [T,K]
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    C = int(math.ceil(T * K / E * cfg.capacity_factor))
+    C = max(8, min(C, T))
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)              # [T,K,E]
+    flatoh = onehot.reshape(T * K, E)
+    pos_in_e = jnp.cumsum(flatoh, axis=0) * flatoh - 1            # slot ids
+    slot = (pos_in_e.max(-1)).reshape(T, K)                       # [T,K]
+    expert = idx
+    keep = (slot < C) & (slot >= 0)
+    slot_c = jnp.clip(slot, 0, C - 1)
+
+    buf = jnp.zeros((E, C, D), x.dtype)
+    # one scatter per routing slot — avoids materializing tokens x K
+    # (the repeat-based dispatch all-gathered T*K*D bytes per layer; see
+    # EXPERIMENTS.md §Perf cell 2)
+    for j in range(K):
+        contrib = jnp.where(keep[:, j:j + 1], 1, 0).astype(x.dtype) * xt
+        buf = buf.at[expert[:, j], slot_c[:, j]].add(contrib, mode="drop")
+    buf = constrain(buf, "expert", None, None)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, params["wg"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype)
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["wi"])
+    h = constrain(h, "expert", None, "mlp")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+    out_buf = constrain(out_buf, "expert", None, None)
+
+    gathered = out_buf[expert.reshape(-1), slot_c.reshape(-1)]    # [T*K, D]
+    gathered = gathered * (weights.reshape(-1, 1) *
+                           keep.reshape(-1, 1)).astype(x.dtype)
+    out = gathered.reshape(T, K, D).sum(1)
+    return constrain(out.reshape(B, S, D), "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_model: int
+    d_inner: int            # = n_heads * head_dim
+    n_heads: int
+    d_state: int = 128
+    d_conv: int = 4
+    chunk: int = 256
+
+    @property
+    def head_dim(self):
+        return self.d_inner // self.n_heads
+
+
+def ssm_init(key, cfg: SSMCfg, dtype):
+    ks = _split(key, 5)
+    D, I, H, N = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.d_state
+    proj_out = 2 * I + 2 * N + H          # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], D, (proj_out,), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, I + 2 * N),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(I, dtype),
+        "out_proj": dense_init(ks[2], I, (D,), dtype),
+    }
+
+
+def _segsum(x):
+    """x [..., L] -> [..., L, L] lower-tri cumulative sums (SSD helper)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssm_fwd(params, cfg: SSMCfg, x, state=None, conv_state=None):
+    """Chunked SSD scan. x [B,S,D]. Returns (y, (state, conv_state)).
+
+    state [B,H,hd,N]; conv_state [B,d_conv-1,I+2N] for decode.
+    """
+    B, S, D = x.shape
+    I, H, N, hd = cfg.d_inner, cfg.n_heads, cfg.d_state, cfg.head_dim
+    zxbcdt = dense(x, params["in_proj"])
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [I, 2 * I, 2 * I + N, 2 * I + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)              # [B,S,I+2N]
+
+    if state is None:
+        # training/prefill: causal depthwise conv over the sequence
+        pad = jnp.zeros((B, cfg.d_conv - 1, conv_in.shape[-1]), conv_in.dtype)
+        cin = jnp.concatenate([pad, conv_in], axis=1)
+        new_conv_state = cin[:, -(cfg.d_conv - 1):, :] if cfg.d_conv > 1 else None
+        windows = jnp.stack([cin[:, i:i + S] for i in range(cfg.d_conv)], -1)
+        conv = jnp.einsum("bscw,wc->bsc", windows,
+                          params["conv_w"].astype(windows.dtype)).astype(x.dtype)
+    else:
+        cin = jnp.concatenate([conv_state, conv_in], axis=1)      # [B,w-1+S,.]
+        new_conv_state = cin[:, -(cfg.d_conv - 1):, :]
+        windows = jnp.stack([cin[:, i:i + S] for i in range(cfg.d_conv)], -1)
+        conv = jnp.einsum("bscw,wc->bsc", windows,
+                          params["conv_w"].astype(windows.dtype)).astype(x.dtype)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, Bc, Cc = jnp.split(conv, [I, I + N], axis=-1)
+    xs = xs.reshape(B, S, H, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])                     # [B,S,H]
+    A = -jnp.exp(params["A_log"])                                 # [H]
+    dA = dt * A                                                   # [B,S,H]
+
+    if state is None and S > 1:
+        y, final_state = _ssd_chunked(cfg, xs, dt, dA, Bc, Cc)
+    else:
+        st = state if state is not None else jnp.zeros((B, H, hd, N),
+                                                       jnp.float32)
+        xf = xs.astype(jnp.float32)
+        dtx = (dt[..., None] * xf.reshape(B, S, H, hd))           # [B,S,H,hd]
+        # single-step (S small in decode): sequential over S
+        def step(carry, t):
+            stc = carry
+            stc = stc * jnp.exp(dA[:, t])[:, :, None, None] + \
+                dtx[:, t][:, :, :, None] * Bc[:, t].astype(jnp.float32)[:, None, None, :]
+            yt = jnp.einsum("bhdn,bn->bhd", stc,
+                            Cc[:, t].astype(jnp.float32))
+            return stc, yt
+        st, ys = jax.lax.scan(step, st, jnp.arange(S))
+        y = jnp.transpose(ys, (1, 0, 2, 3)).reshape(B, S, H, hd)
+        final_state = st
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, I).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(params["norm"], y)
+    out = dense(y, params["out_proj"])
+    return constrain(out, "batch", None, None), (final_state, new_conv_state)
+
+
+def _ssd_chunked(cfg: SSMCfg, xs, dt, dA, Bc, Cc):
+    """Mamba-2 SSD: block-decomposed attention-like form (fp32).
+
+    Follows the reference algorithm of arXiv:2405.21060 (Listing 1):
+    intra-chunk "attention" with decay mask L, chunk-state construction,
+    inter-chunk linear recurrence, off-diagonal contribution from carried
+    states. Returns (y [B,S,H,hd] fp32, final_state [B,H,hd,N]).
+    """
+    B, S, H, hd = xs.shape
+    N = cfg.d_state
+    Q = min(cfg.chunk, S)
+    assert S % Q == 0, "sequence length must be divisible by the chunk size"
+    nc = S // Q
+    xf = xs.astype(jnp.float32).reshape(B, nc, Q, H, hd)
+    dtc = dt.reshape(B, nc, Q, H)
+    dAc = dA.reshape(B, nc, Q, H)
+    Bf = Bc.astype(jnp.float32).reshape(B, nc, Q, N)
+    Cf = Cc.astype(jnp.float32).reshape(B, nc, Q, N)
+    dtx = dtc[..., None] * xf                                     # dt_k * x_k
+
+    A_cs = jnp.cumsum(dAc, axis=2)                                # [B,nc,Q,H]
+    # intra-chunk: L[h,q,k] = exp(sum_{i=k+1..q} dA_i), q >= k
+    L = jnp.exp(_segsum(jnp.transpose(dAc, (0, 1, 3, 2))))        # [B,nc,H,Q,Q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cf, Bf)                # [B,nc,Q,Q]
+    y_diag = jnp.einsum("bcqk,bchqk,bckhd->bcqhd",
+                        scores, L, dtx)
+
+    # chunk states: contribution of chunk c to the state after chunk c
+    decay_states = jnp.exp(A_cs[:, :, -1:, :] - A_cs)             # [B,nc,Q,H]
+    states = jnp.einsum("bckn,bckh,bckhd->bchdn",
+                        Bf, decay_states, dtx)                    # [B,nc,H,hd,N]
+
+    # inter-chunk recurrence over chunks
+    chunk_decay = jnp.exp(A_cs[:, :, -1, :])                      # [B,nc,H]
+
+    def scan_fn(prev, c):
+        cur = states[:, c] + prev * chunk_decay[:, c][:, :, None, None]
+        return cur, prev                                          # emit state BEFORE chunk c
+
+    init = jnp.zeros_like(states[:, 0])
+    final, prevs = jax.lax.scan(scan_fn, init, jnp.arange(nc))
+    prev_states = jnp.transpose(prevs, (1, 0, 2, 3, 4))           # [B,nc,H,hd,N]
+
+    # off-diagonal: carried state decayed into each position
+    decay_out = jnp.exp(A_cs)                                     # [B,nc,Q,H]
+    y_off = jnp.einsum("bcqn,bcqh,bchdn->bcqhd", Cf, decay_out, prev_states)
+    y = (y_diag + y_off).reshape(B, S, H, hd)
+    return y, final
+
+
+def ssm_cache_init(cfg: SSMCfg, batch, dtype):
+    return (jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                      jnp.float32),
+            jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner + 2 * cfg.d_state),
+                      dtype))

@@ -1,0 +1,307 @@
+"""Decoder-only LM over heterogeneous blocks with scan-over-layers.
+
+A model is a repeating ``block_pattern`` (e.g. [dense], [dense, moe],
+[hybrid]) scanned ``R = n_layers / len(pattern)`` times: per-leaf params
+are stacked along the repetition axis, so the HLO stays O(pattern) deep
+regardless of depth (essential for 60-94-layer configs compiling on CPU).
+
+Per-layer attention windows that break the pattern (Hymba's 3 global
+layers) ride through the scan as a traced int32 array — masks are built
+from traced window scalars, no per-layer control flow.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import constrain
+from . import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCfg:
+    kind: str = "attn"          # attn | mla | ssm | hybrid
+    mlp: str = "dense"          # dense | moe | none
+    window: int = -1            # default window; -1 = full
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    d_model: int
+    n_layers: int
+    vocab: int
+    d_ff: int = 0
+    attn: Optional[L.AttnCfg] = None
+    mla: Optional[L.MLACfg] = None
+    ssm: Optional[L.SSMCfg] = None
+    moe: Optional[L.MoECfg] = None
+    block_pattern: Tuple[BlockCfg, ...] = (BlockCfg(),)
+    # explicit per-layer window override (len n_layers), e.g. Hymba globals
+    layer_windows: Optional[Tuple[int, ...]] = None
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    remat: bool = True
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def pattern_len(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def repeats(self) -> int:
+        assert self.n_layers % self.pattern_len == 0
+        return self.n_layers // self.pattern_len
+
+    def windows_array(self) -> np.ndarray:
+        """[repeats, pattern_len] int32 per-layer windows."""
+        if self.layer_windows is not None:
+            w = np.asarray(self.layer_windows, np.int32)
+        else:
+            w = np.tile(np.array([b.window for b in self.block_pattern],
+                                 np.int32), self.repeats)
+        return w.reshape(self.repeats, self.pattern_len)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelCfg, b: BlockCfg):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"norm1": L.rmsnorm_init(cfg.d_model, cfg.dtype)}
+    if b.kind == "attn":
+        p["attn"] = L.attn_init(ks[0], cfg.attn, cfg.dtype)
+    elif b.kind == "mla":
+        p["attn"] = L.mla_init(ks[0], cfg.mla, cfg.dtype)
+    elif b.kind == "ssm":
+        p["ssm"] = L.ssm_init(ks[1], cfg.ssm, cfg.dtype)
+    elif b.kind == "hybrid":
+        p["attn"] = L.attn_init(ks[0], cfg.attn, cfg.dtype)
+        p["ssm"] = L.ssm_init(ks[1], cfg.ssm, cfg.dtype)
+        p["norm_a"] = L.rmsnorm_init(cfg.d_model, cfg.dtype)
+        p["norm_s"] = L.rmsnorm_init(cfg.d_model, cfg.dtype)
+    else:
+        raise ValueError(b.kind)
+    if b.mlp != "none":
+        p["norm2"] = L.rmsnorm_init(cfg.d_model, cfg.dtype)
+        if b.mlp == "dense":
+            p["mlp"] = L.swiglu_init(ks[2], cfg.d_model, cfg.d_ff, cfg.dtype)
+        elif b.mlp == "moe":
+            p["moe"] = L.moe_init(ks[3], cfg.moe, cfg.dtype)
+        else:
+            raise ValueError(b.mlp)
+    return p
+
+
+def init_params(cfg: ModelCfg, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.repeats * cfg.pattern_len + 3)
+    stacked = []
+    for pi in range(cfg.pattern_len):
+        per_rep = [
+            _block_init(ks[r * cfg.pattern_len + pi], cfg,
+                        cfg.block_pattern[pi])
+            for r in range(cfg.repeats)]
+        stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    emb_scale = 1.0 / math.sqrt(cfg.d_model)
+    params = {
+        "blocks": stacked,
+        "embed": (jax.random.normal(ks[-1], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * emb_scale).astype(cfg.dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (jax.random.normal(
+            ks[-2], (cfg.d_model, cfg.vocab), jnp.float32)
+            * emb_scale).astype(cfg.dtype)
+    return params
+
+
+def param_shapes(cfg: ModelCfg):
+    """ShapeDtypeStruct pytree without allocating (for dry-run)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# block forward (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(p, cfg: ModelCfg, b: BlockCfg, x, positions, window,
+               cache=None, cache_pos=None):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    new_cache = None
+    if b.kind == "attn":
+        acfg = dataclasses.replace(cfg.attn)
+        y, new_kv = L.attn_fwd(p["attn"], acfg, h, positions,
+                               kv_cache=None if cache is None else cache["kv"],
+                               cache_pos=cache_pos, window=window)
+        new_cache = {"kv": new_kv}
+    elif b.kind == "mla":
+        y, new_kv = L.mla_fwd(p["attn"], cfg.mla, h, positions,
+                              kv_cache=None if cache is None else cache["kv"],
+                              cache_pos=cache_pos)
+        new_cache = {"kv": new_kv}
+    elif b.kind == "ssm":
+        st = None if cache is None else cache["ssm"]
+        cs = None if cache is None else cache["conv"]
+        y, (new_st, new_cs) = L.ssm_fwd(p["ssm"], cfg.ssm, h, state=st,
+                                        conv_state=cs)
+        new_cache = {"ssm": new_st, "conv": new_cs}
+    elif b.kind == "hybrid":
+        ya, new_kv = L.attn_fwd(p["attn"], cfg.attn, h, positions,
+                                kv_cache=None if cache is None else cache["kv"],
+                                cache_pos=cache_pos, window=window)
+        st = None if cache is None else cache["ssm"]
+        cs = None if cache is None else cache["conv"]
+        ys, (new_st, new_cs) = L.ssm_fwd(p["ssm"], cfg.ssm, h, state=st,
+                                         conv_state=cs)
+        y = (L.rmsnorm(p["norm_a"], ya, cfg.norm_eps)
+             + L.rmsnorm(p["norm_s"], ys, cfg.norm_eps)) * 0.5
+        new_cache = {"kv": new_kv, "ssm": new_st, "conv": new_cs}
+    x = x + y
+    if b.mlp != "none":
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if b.mlp == "dense":
+            x = x + L.swiglu_fwd(p["mlp"], h2)
+        else:
+            x = x + L.moe_fwd(p["moe"], cfg.moe, h2)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelCfg, tokens, prefix_embeds=None,
+            return_caches=False, cache_len: Optional[int] = None):
+    """tokens [B, S] int32; prefix_embeds [B, Sp, D] (VLM/audio stubs).
+
+    Returns (logits [B, S_total, V], caches or None).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", None, None)
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    windows = jnp.asarray(cfg.windows_array())          # [R, P]
+
+    def body(x, xs):
+        block_params, win = xs
+        for pi, b in enumerate(cfg.block_pattern):
+            blk = lambda x_: _block_fwd(block_params[pi], cfg, b, x_,
+                                        positions, win[pi])[0]
+            if cfg.remat:
+                blk = jax.checkpoint(blk)
+            x = blk(x)
+        return x, None
+
+    if return_caches:
+        # prefill: run without scan-compaction of caches is expensive;
+        # collect caches as scan ys
+        def body_c(x, xs):
+            block_params, win = xs
+            caches = []
+            for pi, b in enumerate(cfg.block_pattern):
+                x, c = _block_fwd(block_params[pi], cfg, b, x, positions,
+                                  win[pi])
+                caches.append(_pad_cache(cfg, b, c, cache_len))
+            return x, tuple(caches)
+        x, caches = jax.lax.scan(body_c, x, (params["blocks"], windows))
+    else:
+        x, _ = jax.lax.scan(body, x, (params["blocks"], windows))
+        caches = None
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    w_un = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = L.dense(x, w_un)
+    return constrain(logits, "batch", None, "vocab"), caches
+
+
+def _pad_cache(cfg, b: BlockCfg, cache, cache_len):
+    """Grow prefill KV caches to the decode capacity."""
+    if cache is None or cache_len is None:
+        return cache
+    out = dict(cache)
+    if "kv" in cache and cache["kv"] is not None and "k" in cache["kv"]:
+        kv = cache["kv"]
+        pad = cache_len - kv["k"].shape[1]
+        if pad > 0:
+            out["kv"] = {
+                "k": jnp.pad(kv["k"], ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "v": jnp.pad(kv["v"], ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "pos": jnp.pad(kv["pos"], ((0, 0), (0, pad))),
+            }
+    elif "kv" in cache and cache["kv"] is not None and "latent" in cache["kv"]:
+        kv = cache["kv"]
+        pad = cache_len - kv["latent"].shape[1]
+        if pad > 0:
+            out["kv"] = {
+                "latent": jnp.pad(kv["latent"], ((0, 0), (0, pad), (0, 0))),
+                "k_rope": jnp.pad(kv["k_rope"],
+                                  ((0, 0), (0, pad), (0, 0), (0, 0))),
+            }
+    return out
+
+
+def loss_fn(params, cfg: ModelCfg, tokens, targets, mask,
+            prefix_embeds=None):
+    """Causal LM loss; targets/mask [B, S] aligned with token positions."""
+    logits, _ = forward(params, cfg, tokens, prefix_embeds)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1]:, :]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    m = mask.astype(jnp.float32)
+    return -(ll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelCfg, batch: int, max_len: int):
+    """Zero caches stacked [R] per pattern position."""
+    out = []
+    for b in cfg.block_pattern:
+        c = {}
+        if b.kind in ("attn", "hybrid"):
+            c["kv"] = L.attn_cache_init(cfg.attn, batch, max_len, cfg.dtype)
+        if b.kind == "mla":
+            c["kv"] = L.mla_cache_init(cfg.mla, batch, max_len, cfg.dtype)
+        if b.kind in ("ssm", "hybrid"):
+            st, cs = L.ssm_cache_init(cfg.ssm, batch, cfg.dtype)
+            c["ssm"], c["conv"] = st, cs
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.repeats,) + x.shape), c)
+        out.append(stacked)
+    return tuple(out)
+
+
+def decode_step(params, cfg: ModelCfg, token, caches, pos):
+    """token [B,1] int32; pos scalar int32 (current position). Returns
+    (logits [B,1,V], new caches)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None].astype(jnp.int32), (B, 1))
+    windows = jnp.asarray(cfg.windows_array())
+
+    def body(x, xs):
+        block_params, layer_caches, win = xs
+        new_caches = []
+        for pi, b in enumerate(cfg.block_pattern):
+            x, nc = _block_fwd(block_params[pi], cfg, b, x, positions,
+                               win[pi], cache=layer_caches[pi], cache_pos=pos)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches, windows))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    w_un = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = L.dense(x, w_un)
+    return constrain(logits, "batch", None, "vocab"), new_caches

@@ -1,0 +1,75 @@
+"""Step functions per ArchSpec: train_step / prefill_step / decode_step.
+
+These are what launch/dryrun.py lowers for every (arch x shape x mesh)
+cell and what launch/train.py jits for real training.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchSpec
+from repro.models import encdec, lm
+from repro.optim import adamw
+
+
+def make_train_step(spec: ArchSpec, opt_cfg: adamw.AdamWCfg):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    if spec.kind == "encdec":
+        def loss(params, batch):
+            return encdec.loss_fn(params, spec.model, batch["frames"],
+                                  batch["tokens"], batch["targets"],
+                                  batch["mask"])
+    else:
+        def loss(params, batch):
+            return lm.loss_fn(params, spec.model, batch["tokens"],
+                              batch["targets"], batch["mask"],
+                              prefix_embeds=batch.get("prefix_embeds"))
+
+    def train_step(params, opt_state, batch):
+        lval, grads = jax.value_and_grad(loss)(params, batch)
+        params, opt_state, metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = lval
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(spec: ArchSpec, cache_len: Optional[int] = None):
+    if spec.kind == "encdec":
+        def prefill(params, batch):
+            memory = encdec.encode(params, spec.model, batch["frames"])
+            logits = encdec.decode_train(params, spec.model, batch["tokens"],
+                                         memory)
+            return logits[:, -1:, :], memory
+        return prefill
+
+    def prefill(params, batch):
+        logits, caches = lm.forward(params, spec.model, batch["tokens"],
+                                    prefix_embeds=batch.get("prefix_embeds"),
+                                    return_caches=True, cache_len=cache_len)
+        return logits[:, -1:, :], caches
+    return prefill
+
+
+def make_decode_step(spec: ArchSpec):
+    if spec.kind == "encdec":
+        def decode(params, batch, caches):
+            return encdec.decode_step(params, spec.model, batch["token"],
+                                      caches, batch["pos"], batch["memory"])
+        return decode
+
+    def decode(params, batch, caches):
+        return lm.decode_step(params, spec.model, batch["token"], caches,
+                              batch["pos"])
+    return decode
+
+
+def init_decode_caches(spec: ArchSpec, batch: int, cache_len: int):
+    if spec.kind == "encdec":
+        return encdec.init_caches(spec.model, batch, min(cache_len, 4096))
+    return lm.init_caches(spec.model, batch, cache_len)

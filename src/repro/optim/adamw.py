@@ -1,0 +1,128 @@
+"""AdamW with optional int8 block-quantized moments and global-norm clip.
+
+The int8 moments (per-block absmax scales, block=256 along the flattened
+axis) cut optimizer HBM from 8 to ~2.06 bytes/param — required to fit the
+400B-class MoE configs in 16 GB/chip (see DESIGN.md §8). Error is bounded
+by the block absmax; tests assert parity with fp32 moments to ~1e-2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWCfg:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quantized: bool = False       # int8 moments
+    block: int = 256
+    warmup: int = 100
+    total_steps: int = 10000
+
+
+def schedule(cfg: AdamWCfg, step):
+    """Linear warmup + cosine decay."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+# --- int8 block quantization -------------------------------------------
+
+def _q_shape(x):
+    n = x.size
+    return n
+
+
+def quantize_i8(x: jax.Array, block: int):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_i8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+class MomentI8(NamedTuple):
+    q: jax.Array
+    scale: jax.Array
+
+
+def init_state(params, cfg: AdamWCfg):
+    def init_m(p):
+        if cfg.quantized:
+            q, s = quantize_i8(jnp.zeros_like(p, jnp.float32), cfg.block)
+            return MomentI8(q, s)
+        return jnp.zeros_like(p, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(init_m, params),
+        "v": jax.tree.map(init_m, params),
+    }
+
+
+def _read(m, shape, cfg):
+    if isinstance(m, MomentI8):
+        return dequantize_i8(m.q, m.scale, shape)
+    return m
+
+
+def _write(val, cfg):
+    if cfg.quantized:
+        return MomentI8(*quantize_i8(val, cfg.block))
+    return val
+
+
+def global_norm(grads):
+    leaves = jax.tree.leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def apply_updates(params, grads, state, cfg: AdamWCfg):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        gf = g.astype(jnp.float32) * scale
+        mf = _read(m, p.shape, cfg) * cfg.b1 + (1 - cfg.b1) * gf
+        vf = _read(v, p.shape, cfg) * cfg.b2 + (1 - cfg.b2) * gf * gf
+        upd = (mf / b1c) / (jnp.sqrt(vf / b2c) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (upd + cfg.weight_decay * pf)
+        new_p.append(pf.astype(p.dtype))
+        new_m.append(_write(mf, cfg))
+        new_v.append(_write(vf, cfg))
+    metrics = {"grad_norm": gn, "lr": lr}
+    return (jax.tree.unflatten(treedef, new_p),
+            {"step": step, "m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v)}, metrics)

@@ -1,0 +1,49 @@
+"""Error-feedback int8 gradient compression (beyond-paper, pod/DCI axis).
+
+compress -> all-reduce int8 (4x fewer DCI bytes) -> decompress; the
+quantization residual feeds back into the next step so the compression
+error stays bounded (EF-SGD). Used for the pure-DP 'pod' axis where
+cross-pod bandwidth dominates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g, block: int = 256):
+    flat = g.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-20)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def decompress(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def ef_compress_tree(grads, residuals):
+    """Returns (compressed pytree, new residuals). Apply before the pod
+    all-reduce; decompress after. residuals start as zeros_like(grads)."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = compress(corrected)
+        back = decompress(q, s, g.shape)
+        return (q, s), corrected - back
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    qs, rs = [], []
+    for g, r in zip(flat_g, flat_r):
+        (q, s), nr = one(g, r)
+        qs.append((q, s))
+        rs.append(nr)
+    return jax.tree.unflatten(tdef, qs), jax.tree.unflatten(tdef, rs)

@@ -1,0 +1,100 @@
+"""Sharding rules: logical axis names -> mesh axes.
+
+Mesh axes:
+  pod   — pure data parallelism across pods (DCI), multi-pod only
+  data  — FSDP + data parallelism inside a pod
+  model — tensor/expert/sequence parallelism
+
+Parameters are 2D-sharded (FSDP over 'data' x TP over 'model'); with
+scan-over-layers XLA all-gathers one layer's weights at a time (ZeRO-3
+behaviour). Activations shard batch over ('pod','data'); long-context
+KV caches shard sequence over 'model' (distributed flash-decode: GSPMD
+inserts the partial-softmax reductions).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (None = replicate)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": "model",        # sequence-sharded KV caches (decode)
+    "embed": "data",          # FSDP axis of weight matrices
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "expert": "model",
+    "vocab": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "latent": None,
+    "frames": None,
+}
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES if rules is None else rules)
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def _mesh_axes(self, logical: Optional[str], dim_size: Optional[int]):
+        ax = self.rules.get(logical)
+        if ax is None:
+            return None
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in self.axis_sizes)
+        if not axes:
+            return None
+        total = 1
+        for a in axes:
+            total *= self.axis_sizes[a]
+        if dim_size is not None and dim_size % total != 0:
+            return None                        # indivisible -> replicate
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, logical_axes: Tuple[Optional[str], ...],
+             shape: Optional[Tuple[int, ...]] = None) -> P:
+        parts = []
+        used = set()
+        for i, name in enumerate(logical_axes):
+            dim = None if shape is None else shape[i]
+            ax = self._mesh_axes(name, dim)
+            # a mesh axis may appear only once in a spec
+            flat = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+            if any(a in used for a in flat):
+                ax = None
+            else:
+                used.update(flat)
+            parts.append(ax)
+        return P(*parts)
+
+    def sharding(self, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+_CURRENT: Optional[ShardingRules] = None
+
+
+def set_rules(rules: Optional[ShardingRules]):
+    global _CURRENT
+    _CURRENT = rules
+
+
+def get_rules() -> Optional[ShardingRules]:
+    return _CURRENT
+
+
+def constrain(x, *logical_axes):
+    """Apply a logical sharding constraint if rules are active."""
+    r = _CURRENT
+    if r is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, r.sharding(tuple(logical_axes), x.shape))

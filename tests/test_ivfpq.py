@@ -1,0 +1,58 @@
+"""Five-step semantics vs int64 numpy oracle + shaping invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ivfpq, shaping
+from repro.core.params import IVFPQParams
+
+
+def _mk(seed, n0=200):
+    p = IVFPQParams(D=16, n_list=8, n_probe=3, n=32, M=4, K=8, k=6,
+                    t_cmp=43)
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(n0, p.D)).astype(np.float32)
+    ids = np.arange(n0, dtype=np.uint32)
+    return p, shaping.build_snapshot(vecs, ids, p, seed=seed), rng
+
+
+def test_search_matches_oracle():
+    p, snap, rng = _mk(0)
+    for _ in range(10):
+        q = shaping.fixed_point_encode(
+            rng.normal(size=p.D).astype(np.float32), snap.v_max)
+        tr = ivfpq.search_snapshot(snap, q)
+        ref_items, ref_d, ref_probes = ivfpq.ref_search_np(snap, q)
+        got_d = (np.asarray(tr.out_d.hi).astype(np.int64) << 32) \
+            | np.asarray(tr.out_d.lo).astype(np.int64)
+        assert (got_d == ref_d).all()
+        assert (np.asarray(tr.items) == ref_items).all()
+        assert set(np.asarray(tr.probes).tolist()) == set(ref_probes.tolist())
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 1000))
+def test_rebalance_capacity_invariant(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(120, 8)).astype(np.float32)
+    cents, assign = shaping.kmeans(x, 6, seed=seed)
+    assign2, moved = shaping.rebalance(x, cents, assign, cap=25)
+    counts = np.bincount(assign2, minlength=6)
+    assert (counts <= 25).all()
+    assert counts.sum() == 120       # no points lost
+
+
+def test_self_recall():
+    p, snap, rng = _mk(1)
+    hits = 0
+    vecs = None
+    for j in range(20):
+        # query = a db vector -> its own id should be retrieved
+        qv = snap.centroids  # placeholder to silence lints
+    # regenerate original vectors deterministically
+    rng = np.random.default_rng(1)
+    vecs = rng.normal(size=(200, p.D)).astype(np.float32)
+    for j in range(0, 200, 10):
+        q = shaping.fixed_point_encode(vecs[j], snap.v_max)
+        tr = ivfpq.search_snapshot(snap, q)
+        hits += int(j in set(np.asarray(tr.items).tolist()))
+    assert hits >= 16, hits

@@ -1,0 +1,67 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp
+oracle. Field kernels are exact (integer equality); the f32 ADC fast path
+uses allclose."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import field as F
+
+P = F.P_INT
+
+
+@pytest.mark.parametrize("n", [128, 256])
+def test_poseidon_kernel(n):
+    from repro.kernels.poseidon import ops, ref
+    rng = np.random.default_rng(n)
+    x = rng.integers(0, P, size=(n, 12), dtype=np.uint64)
+    lo = jnp.asarray((x & 0xFFFFFFFF).astype(np.uint32))
+    hi = jnp.asarray((x >> 32).astype(np.uint32))
+    klo, khi = ops.permute(lo, hi)
+    rlo, rhi = ref.poseidon_permute_ref(lo, hi)
+    np.testing.assert_array_equal(np.asarray(klo), np.asarray(rlo))
+    np.testing.assert_array_equal(np.asarray(khi), np.asarray(rhi))
+
+
+@pytest.mark.parametrize("n,M,K", [(256, 8, 16), (512, 4, 64), (300, 16, 8)])
+def test_adc_scan_kernel(n, M, K):
+    from repro.kernels.adc_scan import ops, ref
+    rng = np.random.default_rng(n + M)
+    codes = jnp.asarray(rng.integers(0, K, size=(n, M), dtype=np.int32))
+    lut = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32) ** 2)
+    flags = jnp.asarray((rng.random(n) > 0.2).astype(np.int32))
+    got = ops.score(codes, lut, flags, d_max=1e9)
+    exp = ref.adc_scan_ref(codes, lut, flags, d_max=1e9)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-6)
+
+
+@pytest.mark.parametrize("B,log_n,stage", [(8, 8, 0), (8, 8, 3), (16, 6, 2)])
+def test_ntt_stage_kernel(B, log_n, stage):
+    from repro.core import ntt
+    from repro.kernels.ntt_butterfly import ops, ref
+    rng = np.random.default_rng(B + stage)
+    n = 1 << log_n
+    half = n >> (stage + 1)
+    tws = ntt._stage_twiddles(log_n, False)[stage]
+    x = rng.integers(0, P, size=(B, n), dtype=np.uint64)
+    lo = jnp.asarray((x & 0xFFFFFFFF).astype(np.uint32))
+    hi = jnp.asarray((x >> 32).astype(np.uint32))
+    tw = F.from_u64(tws)
+    klo, khi = ops.ntt_stage(lo, hi, tw.lo, tw.hi, half)
+    rlo, rhi = ref.ntt_stage_ref(lo, hi, tw.lo, tw.hi, half)
+    np.testing.assert_array_equal(np.asarray(klo), np.asarray(rlo))
+    np.testing.assert_array_equal(np.asarray(khi), np.asarray(rhi))
+
+
+@pytest.mark.parametrize("n", [256, 1024, 700])
+def test_grand_product_kernel(n):
+    from repro.kernels.grand_product import ops
+    rng = np.random.default_rng(n)
+    x = rng.integers(1, P, size=n, dtype=np.uint64)
+    g = F.from_u64(x)
+    got = ops.grand_product(g.lo, g.hi)
+    import functools
+    exp = functools.reduce(lambda a, b: a * int(b) % P,
+                           x.astype(object), 1)
+    assert int(F.to_u64(F.reshape(got, (1,)))[0]) == exp

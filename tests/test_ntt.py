@@ -1,0 +1,37 @@
+"""NTT/LDE vs naive polynomial evaluation + hypothesis roundtrip."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field as F, ntt
+from repro.core.field import GF
+
+P = F.P_INT
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=2, max_value=7), st.integers(0, 2 ** 32))
+def test_roundtrip(log_n, seed):
+    n = 1 << log_n
+    rng = np.random.default_rng(seed)
+    v = rng.integers(0, P, size=(2, n), dtype=np.uint64)
+    x = F.from_u64(v.reshape(-1))
+    x = GF(x.lo.reshape(2, n), x.hi.reshape(2, n))
+    back = F.to_u64(ntt.ntt(ntt.ntt(x, inverse=False), inverse=True))
+    assert (back == v).all()
+
+
+def test_lde_matches_naive():
+    log_n, blowup = 3, 4
+    n = 1 << log_n
+    rng = np.random.default_rng(0)
+    coeffs = rng.integers(0, P, size=n, dtype=np.uint64).astype(object)
+    pts = ntt.domain_points(log_n).astype(object)
+    vals = np.array([sum(int(c) * pow(int(p), i, P)
+                         for i, c in enumerate(coeffs)) % P
+                     for p in pts], dtype=object)
+    ev = ntt.lde(F.from_u64(vals.astype(np.uint64)), blowup)
+    big = ntt.domain_points(log_n + 2, shift=ntt.COSET_SHIFT).astype(object)
+    naive = [sum(int(c) * pow(int(pt), i, P)
+                 for i, c in enumerate(coeffs)) % P for pt in big]
+    assert (F.to_u64(ev).astype(object) == np.array(naive,
+                                                    dtype=object)).all()

@@ -1,0 +1,101 @@
+"""End-to-end V3DB statement: prove + verify + tamper rejection on a tiny
+config (multiset design). Marked slow — dominated by one-time jit compile
+of the 7-table STARK pipeline."""
+import numpy as np
+import pytest
+
+from repro.core import circuits, ivfpq, shaping
+from repro.core.params import IVFPQParams
+
+
+@pytest.mark.slow
+def test_prove_verify_tamper():
+    p = IVFPQParams(D=8, n_list=8, n_probe=2, n=4, M=2, K=4, k=3,
+                    t_cmp=40, fp_bits=12)
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(24, p.D)).astype(np.float32)
+    ids = np.arange(24, dtype=np.uint32) + 100
+    snap = shaping.build_snapshot(vecs, ids, p, seed=0)
+    q = shaping.fixed_point_encode(rng.normal(size=p.D).astype(np.float32),
+                                   snap.v_max, p.fp_bits)
+    trace = ivfpq.search_snapshot(snap, q)
+    items = [int(x) for x in np.asarray(trace.items)]
+    sysm = circuits.build_system(snap, "multiset", seed=0)
+    proof, pitems = circuits.prove_query(sysm, snap, q, trace, n_queries=8)
+    assert pitems == items
+    assert circuits.verify_query(sysm, sysm.com, q, items, proof)
+    bad = list(items)
+    bad[0] += 1
+    assert not circuits.verify_query(sysm, sysm.com, q, bad, proof)
+    com2 = sysm.com.copy()
+    com2[0, 0] ^= np.uint64(1)
+    assert not circuits.verify_query(sysm, com2, q, items, proof)
+
+
+@pytest.mark.slow
+def test_constraints_vanish_both_designs():
+    """Direct constraint check on raw witnesses for BOTH designs (fast
+    path that doesn't run FRI — catches layout/witness regressions)."""
+    import jax.numpy as jnp
+    from repro.core import field as F
+    from repro.core.field import GF
+
+    p = IVFPQParams(D=8, n_list=8, n_probe=2, n=4, M=2, K=4, k=3,
+                    t_cmp=40, fp_bits=12)
+    rng = np.random.default_rng(1)
+    vecs = rng.normal(size=(24, p.D)).astype(np.float32)
+    ids = np.arange(24, dtype=np.uint32) + 100
+    snap = shaping.build_snapshot(vecs, ids, p, seed=1)
+    q = shaping.fixed_point_encode(rng.normal(size=p.D).astype(np.float32),
+                                   snap.v_max, p.fp_bits)
+    trace = ivfpq.search_snapshot(snap, q)
+    P = F.P_INT
+    for design in ("multiset", "baseline"):
+        sysm = circuits.build_system(snap, design, seed=1)
+        aux = circuits._aux_from_trace(snap, q, trace)
+        rngw = np.random.default_rng(2)
+        t_dist, t_s2, t_rs, t_lt, t_rc, t_cd, t_s5 = sysm.tbls
+        fills = [circuits.fill_t_dist(t_dist, p, aux, rngw)]
+        if design == "multiset":
+            fills.append(circuits.fill_sort_table(
+                t_s2, aux["s2_packed"], p.n_probe, rngw))
+        else:
+            fills.append(circuits.fill_t_bb(
+                t_s2, [int(aux["cent_dist"][i]) * circuits.PACK + i
+                       for i in range(p.n_list)], p.n_probe, rngw)[0])
+        fills.append(circuits.fill_t_resid(t_rs, p, aux, rngw))
+        fills.append(circuits.fill_t_lut(t_lt, p, aux, rngw, design))
+        fills.append(circuits.fill_t_rec(t_rc, p, aux, rngw))
+        if design == "multiset":
+            fills.append(circuits.fill_t_cand(t_cd, p, aux, rngw))
+            fills.append(circuits.fill_sort_table(
+                t_s5, aux["s5_packed_sorted"], p.k, rngw))
+        else:
+            fills.append(circuits.fill_t_cand_bb(t_cd, p, aux, rngw))
+            fills.append(circuits.fill_t_bb(
+                t_s5, aux["s5_packed_orig"], p.k, rngw)[0])
+        A, B, G = 12345, 6789, 424242
+        total = circuits.public_q_sum(p, q, (A, B, G))
+        sc = lambda v: GF(jnp.uint32(v & 0xFFFFFFFF), jnp.uint32(v >> 32))
+        ch = {"alpha": sc(A), "beta": sc(B), "gamma": sc(G)}
+        for tbl, p1_np, at, scc in zip(sysm.tbls, fills, sysm.tables,
+                                       sysm.snap_cols):
+            snap_np = F.to_u64(scc) if scc is not None else None
+            p2_np, run = tbl.phase2_np(p1_np, snap_np, (A, B, G),
+                                       np.random.default_rng(7))
+            total = (total + run) % P
+            mk = lambda arr: F.from_u64(arr)
+            roll = lambda arr: np.roll(arr, -1, axis=1)
+            z = lambda n: GF(jnp.zeros((0, tbl.n), jnp.uint32),
+                             jnp.zeros((0, tbl.n), jnp.uint32))
+            pre = {0: mk(tbl.pre_np), 1: mk(roll(tbl.pre_np))}
+            sn = {0: mk(snap_np), 1: mk(roll(snap_np))} \
+                if snap_np is not None else {0: z(0), 1: z(0)}
+            p1g = {0: mk(p1_np), 1: mk(roll(p1_np))}
+            p2g = {0: mk(p2_np), 1: mk(roll(p2_np))}
+            cons = at.eval_constraints(pre, sn, p1g, p2g, ch)
+            for ci, c in enumerate(cons):
+                vals = F.to_u64(c)
+                nz = np.nonzero(vals[:tbl.n - 1])[0]
+                assert len(nz) == 0, (design, tbl.name, ci, nz[:5])
+        assert total == 0, (design, total)
